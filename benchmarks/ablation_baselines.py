@@ -1,0 +1,49 @@
+"""Ablation: CFL vs uncoded FL vs gradient coding (paper ref [5]) at the
+§IV setting — the three-way comparison the paper motivates in §I."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.gradient_coding import run_gradient_coding
+from repro.sim import simulator as S
+from repro.sim.network import paper_fleet
+from repro.sim.simulator import convergence_time
+
+from .common import LR, M, Timer, emit, problem
+
+TARGET = 1e-3
+
+
+def main(epochs: int = 1000, nu: float = 0.2) -> None:
+    xs, ys, beta_true = problem(0)
+    fleet = paper_fleet(nu, nu, seed=0)
+
+    with Timer() as t:
+        res_u = S.run_uncoded(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
+                              rng=np.random.default_rng(0))
+    tu = convergence_time(res_u, TARGET)
+    emit("ablation/uncoded", t.us / epochs, f"t_conv={tu:.0f}s")
+
+    with Timer() as t:
+        res_c = S.run_cfl(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
+                          rng=np.random.default_rng(0),
+                          key=jax.random.PRNGKey(7), fixed_c=int(0.28 * M),
+                          include_upload_delay=False)
+    tc = convergence_time(res_c, TARGET)
+    emit("ablation/cfl_delta=0.28", t.us / epochs,
+         f"t_conv={tc:.0f}s;gain_vs_uncoded={tu/tc:.2f}")
+
+    for r in (2, 3):
+        with Timer() as t:
+            res_g = run_gradient_coding(fleet, xs, ys, beta_true, lr=LR,
+                                        epochs=epochs,
+                                        rng=np.random.default_rng(0), r=r)
+        tg = convergence_time(res_g, TARGET)
+        emit(f"ablation/gradcode_r={r}", t.us / epochs,
+             f"t_conv={tg:.0f}s;gain_vs_uncoded={tu/tg:.2f};"
+             f"raw_data_shared_bits={res_g.uplink_bits_total:.2e}")
+
+
+if __name__ == "__main__":
+    main()

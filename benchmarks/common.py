@@ -1,0 +1,52 @@
+"""Shared setup for the paper-figure benchmarks (§IV configuration)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.sim import simulator as S
+from repro.sim.network import paper_fleet
+
+N_DEVICES = 24
+ELL = 300
+D = 500
+LR = 0.0085
+M = N_DEVICES * ELL
+TARGET_NMSE = 3e-4  # paper Fig. 4 convergence criterion
+
+
+def problem(seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    return S.generate_linreg(key, N_DEVICES, ELL, D)
+
+
+def run_pair(nu_comp: float, nu_link: float, delta: float, epochs: int,
+             seed: int = 0, include_upload_delay: bool = False,
+             xs=None, ys=None, beta_true=None):
+    """One (uncoded, coded) run pair sharing the same fleet + data."""
+    fleet = paper_fleet(nu_comp, nu_link, seed=seed)
+    if xs is None:
+        xs, ys, beta_true = problem(seed)
+    res_u = S.run_uncoded(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
+                          rng=np.random.default_rng(seed))
+    res_c = S.run_cfl(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
+                      rng=np.random.default_rng(seed),
+                      key=jax.random.PRNGKey(seed + 100),
+                      fixed_c=int(delta * M),
+                      include_upload_delay=include_upload_delay)
+    return fleet, res_u, res_c
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

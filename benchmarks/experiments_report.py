@@ -1,0 +1,114 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+the recorded dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.experiments_report [--optimized]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.roofline.analysis import model_flops
+
+
+def _max_term(st):
+    coll = sum(v for k, v in st["corrected_collectives"].items()
+               if not k.startswith("n_"))
+    return (st["corrected_flops"] / PEAK_FLOPS_BF16,
+            st["corrected_bytes"] / HBM_BW, coll / ICI_BW)
+
+
+def dryrun_table(runs: dict, mesh: str) -> str:
+    lines = ["| arch | shape | compile s | params | args GB/dev | "
+             "HLO flops/dev | coll bytes/dev |",
+             "|---|---|---|---|---|---|---|"]
+    for key in sorted(runs):
+        a, s, m = key.split("|")
+        if m != mesh:
+            continue
+        st = runs[key]
+        if not st.get("ok"):
+            lines.append(f"| {a} | {s} | FAILED | | | | |")
+            continue
+        coll = sum(v for k, v in st["corrected_collectives"].items()
+                   if not k.startswith("n_"))
+        lines.append(
+            f"| {a} | {s} | {st['compile_s']} | {st['n_params']/1e9:.2f}B | "
+            f"{(st['memory']['argument_size'] or 0)/1e9:.2f} | "
+            f"{st['corrected_flops']:.2e} | {coll:.2e} |")
+    return "\n".join(lines)
+
+
+def roofline_table(runs: dict, mesh: str = "16x16") -> str:
+    lines = ["| arch | shape | t_comp s | t_mem s | t_coll s | dominant | "
+             "MODEL_FLOPS/dev | useful | fits 16G |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(runs):
+        a, s, m = key.split("|")
+        if m != mesh or not runs[key].get("ok"):
+            continue
+        st = runs[key]
+        tc, tm, tx = _max_term(st)
+        dom = max((("compute", tc), ("memory", tm), ("collective", tx)),
+                  key=lambda kv: kv[1])[0]
+        cfg = get_config(a.split("-sw")[0])
+        mf = model_flops(cfg, s) / st["n_devices"]
+        ratio = mf / st["corrected_flops"] if st["corrected_flops"] else 0
+        gb = (st["memory"]["argument_size"] or 0) / 1e9
+        fits = "yes" if gb < 16 else "NO"
+        lines.append(f"| {a} | {s} | {tc:.3e} | {tm:.3e} | {tx:.3e} | "
+                     f"{dom} | {mf:.2e} | {ratio:.2f} | {fits} ({gb:.1f}G) |")
+    return "\n".join(lines)
+
+
+def before_after(base: dict, opt: dict, mesh: str = "16x16") -> str:
+    lines = ["| arch | shape | baseline max-term s | optimized max-term s | "
+             "speedup |", "|---|---|---|---|---|"]
+    tot_b = tot_o = 0.0
+    for key in sorted(base):
+        a, s, m = key.split("|")
+        if m != mesh or key not in opt:
+            continue
+        if not (base[key].get("ok") and opt[key].get("ok")):
+            continue
+        mb = max(_max_term(base[key]))
+        mo = max(_max_term(opt[key]))
+        tot_b += mb
+        tot_o += mo
+        lines.append(f"| {a} | {s} | {mb:.3e} | {mo:.3e} | {mb/mo:.2f}x |")
+    lines.append(f"| **sum** | | **{tot_b:.1f}** | **{tot_o:.1f}** | "
+                 f"**{tot_b/tot_o:.2f}x** |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="dryrun_results.json")
+    ap.add_argument("--opt", default="dryrun_optimized.json")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "perf"])
+    args = ap.parse_args()
+    base = json.load(open(args.base))
+    try:
+        opt = json.load(open(args.opt))
+    except FileNotFoundError:
+        opt = None
+
+    if args.section in ("all", "dryrun"):
+        print("### Single-pod mesh 16x16 (256 chips)\n")
+        print(dryrun_table(base["runs"], "16x16"))
+        print("\n### Multi-pod mesh 2x16x16 (512 chips)\n")
+        print(dryrun_table(base["runs"], "2x16x16"))
+        print("\nSkips:", base.get("skips", {}))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline (single-pod, paper-faithful baseline)\n")
+        print(roofline_table(base["runs"]))
+    if args.section in ("all", "perf") and opt:
+        print("\n### Baseline vs optimized (single-pod)\n")
+        print(before_after(base["runs"], opt["runs"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: jit'd wall time of the Pallas kernels (interpret
+mode on CPU — correctness-representative, not TPU-representative) vs the
+pure-jnp reference path at the paper's §IV shapes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.coded_grad import ops as cg_ops
+from repro.kernels.encode import ops as en_ops
+
+from .common import emit
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    # paper shapes: composite parity c=936, d=500 (delta=0.13)
+    c, d, ell = 936, 500, 300
+    a = jax.random.normal(key, (c, d))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (c,))
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (d,))
+    us_ref = _time(jax.jit(cg_ops.reference), a, y, beta)
+    emit("kernels/coded_grad_ref_jnp", us_ref, f"shape={c}x{d}")
+    us_k = _time(lambda *args: cg_ops.lsq_gradient(*args), a, y, beta)
+    emit("kernels/coded_grad_pallas_interpret", us_k,
+         "interpret=True (CPU validation mode; perf target is TPU)")
+
+    g = jax.random.normal(key, (c, ell))
+    w = jax.random.uniform(jax.random.fold_in(key, 3), (ell,))
+    x = jax.random.normal(jax.random.fold_in(key, 4), (ell, d))
+    us_ref = _time(jax.jit(en_ops.reference), g, w, x)
+    emit("kernels/encode_ref_jnp", us_ref, f"shape={c}x{ell}x{d}")
+    us_k = _time(lambda *args: en_ops.encode_parity(*args), g, w, x)
+    emit("kernels/encode_pallas_interpret", us_k,
+         "interpret=True (CPU validation mode; perf target is TPU)")
+
+    from repro.kernels.flash_attn import ops as fa_ops
+    q = jax.random.normal(key, (1, 4, 256, 64))
+    kk = jax.random.normal(jax.random.fold_in(key, 5), (1, 4, 256, 64))
+    vv = jax.random.normal(jax.random.fold_in(key, 6), (1, 4, 256, 64))
+    us_ref = _time(jax.jit(fa_ops.reference), q, kk, vv)
+    emit("kernels/flash_attn_ref_jnp", us_ref, "shape=B1xH4xS256xD64")
+    us_k = _time(lambda *a: fa_ops.causal_attention(*a, block_q=64,
+                                                    block_k=64), q, kk, vv)
+    emit("kernels/flash_attn_pallas_interpret", us_k,
+         "interpret=True (CPU validation mode; perf target is TPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""§Perf hillclimb harness: lower one (arch x shape) variant on the
+single-pod mesh and print the three roofline terms.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate \
+        --arch granite-8b --shape train_4k \
+        --set attn_impl=repeat --set moe.capacity_factor=1.25 \
+        [--fsdp] [--tag label]
+
+Each --set does a dataclasses.replace on the ArchConfig (dotted fields hit
+the nested specs).  Output: one CSV row per run, appended to
+perf_iterations.csv for the EXPERIMENTS.md §Perf log.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+
+
+def apply_sets(cfg, sets):
+    for kv in sets:
+        path, val = kv.split("=", 1)
+        try:
+            val = json.loads(val)
+        except json.JSONDecodeError:
+            pass
+        parts = path.split(".")
+        if len(parts) == 1:
+            cfg = dataclasses.replace(cfg, **{parts[0]: val})
+        else:
+            sub = getattr(cfg, parts[0])
+            sub = dataclasses.replace(sub, **{parts[1]: val})
+            cfg = dataclasses.replace(cfg, **{parts[0]: sub})
+    return cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--fsdp", action="store_true",
+                    help="force FSDP param sharding for this arch")
+    ap.add_argument("--remat", default="full", choices=["full", "save_ar"])
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--csv", default="perf_iterations.csv")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.launch import dryrun
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import sharding as SH
+
+    cfg = get_config(args.arch)
+    cfg = dryrun._maybe_sliding_window(cfg, args.shape)
+    cfg = apply_sets(cfg, args.set)
+    if args.fsdp:
+        SH.FSDP_ARCHS.add(SH.base_arch_name(cfg.name))
+
+    mesh = make_production_mesh(multi_pod=False)
+    stats = dryrun.lower_one(cfg, args.shape, mesh, remat=args.remat,
+                             zero1=args.zero1)
+    coll = sum(v for k, v in stats["corrected_collectives"].items()
+               if not k.startswith("n_"))
+    t_c = stats["corrected_flops"] / PEAK_FLOPS_BF16
+    t_m = stats["corrected_bytes"] / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    gb = (stats["memory"]["argument_size"] or 0) / 1e9
+    row = (f"{args.arch},{args.shape},{args.tag or ';'.join(args.set) or 'baseline'},"
+           f"{t_c:.4e},{t_m:.4e},{t_x:.4e},{dom},{gb:.2f}")
+    print("arch,shape,variant,t_compute,t_memory,t_collective,dominant,args_gb")
+    print(row)
+    with open(args.csv, "a") as f:
+        f.write(row + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

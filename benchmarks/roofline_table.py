@@ -1,0 +1,62 @@
+"""Roofline table (EXPERIMENTS.md §Roofline): three terms per
+(arch x shape) from the recorded dry-run, single-pod mesh, with the
+MODEL_FLOPS/HLO_FLOPs useful-compute ratio and the dominant bottleneck."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.roofline.analysis import model_flops
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def rows(results_path: str = RESULTS, mesh: str = "16x16"):
+    with open(results_path) as f:
+        data = json.load(f)
+    out = []
+    for key, st in sorted(data["runs"].items()):
+        arch, shape, m = key.split("|")
+        if m != mesh or not st.get("ok"):
+            continue
+        base = arch.split("-sw")[0]
+        cfg = get_config(base)
+        coll = sum(v for k, v in st["corrected_collectives"].items()
+                   if not k.startswith("n_"))
+        t_c = st["corrected_flops"] / PEAK_FLOPS_BF16
+        t_m = st["corrected_bytes"] / HBM_BW
+        t_x = coll / ICI_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops(cfg, shape)
+        mf_dev = mf / st["n_devices"]
+        ratio = mf_dev / st["corrected_flops"] if st["corrected_flops"] else 0
+        out.append({
+            "arch": arch, "shape": shape,
+            "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "dominant": dom,
+            "model_flops_per_dev": mf_dev,
+            "useful_ratio": ratio,
+            "hlo_flops": st["corrected_flops"],
+            "hlo_bytes": st["corrected_bytes"],
+            "coll_bytes": coll,
+            "args_gb": (st["memory"]["argument_size"] or 0) / 1e9,
+        })
+    return out
+
+
+def main() -> None:
+    table = rows()
+    print("arch,shape,t_compute_s,t_memory_s,t_collective_s,dominant,"
+          "useful_ratio,args_gb_per_dev")
+    for r in table:
+        print(f"{r['arch']},{r['shape']},{r['t_compute']:.4e},"
+              f"{r['t_memory']:.4e},{r['t_collective']:.4e},"
+              f"{r['dominant']},{r['useful_ratio']:.3f},"
+              f"{r['args_gb']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

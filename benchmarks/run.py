@@ -1,0 +1,64 @@
+"""Benchmark harness: one entry per paper figure + kernels + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig2,fig3,...]
+
+Prints ``name,us_per_call,derived`` CSV lines (stdout); paper-claim
+comparisons live in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced epoch counts (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig2,fig3,fig4,fig5,"
+                         "ablation,noniid,kernels,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    if want("fig2"):
+        from . import fig2_convergence
+        fig2_convergence.main(epochs=400 if args.fast else 1200)
+    if want("fig3"):
+        from . import fig3_histogram
+        fig3_histogram.main(draws=4000 if args.fast else 20000)
+    if want("fig4"):
+        from . import fig4_coding_gain
+        fig4_coding_gain.main(epochs=500 if args.fast else 1400)
+    if want("fig5"):
+        from . import fig5_comm_load
+        fig5_comm_load.main(epochs=600 if args.fast else 1600)
+    if want("noniid"):
+        from . import noniid
+        noniid.main(epochs=600 if args.fast else 1200)
+    if want("ablation"):
+        from . import ablation_baselines
+        ablation_baselines.main(epochs=600 if args.fast else 1000)
+    if want("kernels"):
+        from . import kernels
+        kernels.main()
+    if want("roofline"):
+        from . import roofline_table
+        try:
+            roofline_table.main()
+        except FileNotFoundError:
+            print("roofline/skipped,0.0,run repro.launch.dryrun first")
+
+    print(f"total,{(time.time() - t0) * 1e6:.0f},benchmark suite wall time")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + autoregressive decode with KV/SSM
+caches across three architecture families (dense GQA, MoE, SSM).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve as launch_serve
+
+
+def main():
+    for arch in ["granite-8b", "phi3.5-moe-42b-a6.6b", "mamba2-1.3b"]:
+        print(f"\n--- {arch} (reduced) ---")
+        launch_serve.main(["--arch", arch, "--reduced", "--batch", "4",
+                           "--prompt-len", "64", "--new-tokens", "16"])
+
+
+if __name__ == "__main__":
+    main()

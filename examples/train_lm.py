@@ -1,0 +1,34 @@
+"""End-to-end driver: train the ~100M-parameter LM for a few hundred steps
+with the straggler-aware federated substrate.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --steps 50 --plain
+
+Thin wrapper over the production launcher (repro.launch.train) so the
+example exercises the same code path as the cluster entry point.
+"""
+import argparse
+import sys
+
+from repro.launch import train as launch_train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--plain", action="store_true",
+                    help="plain data-parallel instead of federated")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    argv = ["--arch", "lm-100m", "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--log-every", "10"]
+    if not args.plain:
+        argv += ["--federated", "--n-clients", "8", "--nu", "0.2"]
+    return launch_train.main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""msgpack-based checkpointing for arbitrary pytrees of jnp arrays.
+
+Layout: <dir>/step_<n>.msgpack, each file a self-contained flat map
+{path -> {dtype, shape, raw bytes}} plus the saved step.  Restore rebuilds
+into a caller-supplied pytree template (so shardings/dtypes are re-applied
+by the caller) or into plain numpy when no template is given.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    payload = {
+        "step": step,
+        "arrays": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in flat.items()
+        },
+    }
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.msgpack")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)  # atomic publish
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for name in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)\.msgpack", name))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: Any = None,
+                       step: Optional[int] = None) -> tuple[int, Any]:
+    """Returns (step, tree).  With a template, leaves are cast to the
+    template's dtypes and validated against its shapes."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = {
+        k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"]))
+        .reshape(v["shape"])
+        for k, v in payload["arrays"].items()
+    }
+    if template is None:
+        return payload["step"], arrays
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for pth, leaf in leaves_with_path:
+        key = _SEP.join(_path_str(p) for p in pth)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return payload["step"], jax.tree_util.tree_unflatten(treedef, out)

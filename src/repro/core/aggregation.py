@@ -1,0 +1,81 @@
+"""Gradient computation & straggler-masked aggregation (paper §II, §III-D).
+
+Two gradient sources arrive at the server each epoch:
+
+  * systematic partial gradients, computed by client i over its first
+    ell*_i local points:  g_i = X_i[:l]^T (X_i[:l] beta - y_i[:l]);
+    only the subset with T_i <= t* arrives (mask),
+  * the parity gradient the server computes preemptively on the composite
+    parity data:  g_par = (1/c) X~^T (X~ beta - y~)            (Eq. 18)
+    which approximates sum_i sum_k w_ik^2 x_ik^T (x_ik beta - y_ik).
+
+Their sum is an (approximately) unbiased estimate of the full gradient
+X^T (X beta - y) (Eqs. 18-19).  All ops are jit-compatible; the mask is a
+traced operand so one compiled step serves every epoch.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def client_partial_gradients(xs: jax.Array, ys: jax.Array,
+                             load_mask: jax.Array, beta: jax.Array) -> jax.Array:
+    """Per-client partial gradients over their systematic loads.
+
+    xs: (n, ell, d), ys: (n, ell)
+    load_mask: (n, ell) 1.0 for the points each client actually processes
+               (its first ell*_i points), 0.0 for punctured points
+    Returns (n, d) per-client partial gradients.
+    """
+    resid = (jnp.einsum("nld,d->nl", xs, beta) - ys) * load_mask
+    return jnp.einsum("nld,nl->nd", xs, resid)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def parity_gradient(x_par: jax.Array, y_par: jax.Array, beta: jax.Array,
+                    use_kernel: bool = False) -> jax.Array:
+    """(1/c) X~^T (X~ beta - y~)  — the server's redundant gradient (Eq. 18)."""
+    c = x_par.shape[0]
+    if use_kernel:
+        from repro.kernels.coded_grad import ops as cg_ops
+        g = cg_ops.lsq_gradient(x_par, y_par, beta)
+    else:
+        g = x_par.T @ (x_par @ beta - y_par)
+    return g / c
+
+
+@jax.jit
+def combine(partial_grads: jax.Array, received: jax.Array,
+            g_parity: jax.Array, parity_received: jax.Array) -> jax.Array:
+    """Deadline-masked combination of both gradient sources (Eq. 18 + 19).
+
+    partial_grads: (n, d) per-client systematic gradients
+    received: (n,) {0,1} mask — client i's gradient arrived by t*
+    g_parity: (d,) parity gradient
+    parity_received: scalar {0,1} — the server's own parity computation
+                     finished by t* (device n+1 in Eq. 13)
+    """
+    g_sys = jnp.einsum("nd,n->d", partial_grads, received)
+    return g_sys + parity_received * g_parity
+
+
+@jax.jit
+def uncoded_full_gradient(xs: jax.Array, ys: jax.Array, beta: jax.Array) -> jax.Array:
+    """Baseline uncoded FL gradient: every client, every point (Eq. 2)."""
+    resid = jnp.einsum("nld,d->nl", xs, beta) - ys
+    return jnp.einsum("nld,nl->d", xs, resid)
+
+
+@jax.jit
+def gd_update(beta: jax.Array, grad: jax.Array, lr: float, m: int) -> jax.Array:
+    """beta <- beta - (mu/m) * grad  (Eq. 3)."""
+    return beta - (lr / m) * grad
+
+
+def nmse(beta_hat: jax.Array, beta_true: jax.Array) -> jax.Array:
+    """Normalized mean-square error ||b^ - b||^2 / ||b||^2 (paper §IV)."""
+    return jnp.sum((beta_hat - beta_true) ** 2) / jnp.sum(beta_true ** 2)

@@ -1,0 +1,148 @@
+"""Two-step coding-redundancy optimization (paper §III-B, Eqs. 14-16).
+
+Given delay parameters for n edge devices + the central server (device n+1),
+find:
+
+  * per-device systematic loads  ell*_i(t*)   (points each device processes),
+  * the epoch deadline           t*,
+  * the coding redundancy        c = ell*_{n+1}(t*)  (parity rows the server
+    processes each epoch == row dimension of every client generator matrix).
+
+t* = argmin_t { m <= E[R(t; ell*(t))] <= m + eps }  (Eq. 16); the aggregate
+expected return E[R] = sum_i ell*_i(t) Pr{T_i <= t} is nondecreasing in t, so
+t* is found by bisection to a relative tolerance.
+
+The module also supports a *fixed redundancy* mode used by the paper's Fig. 2
+and Fig. 5 sweeps: given c (equivalently delta = c/m), cap the server load at
+c and solve only for t*.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .delay_model import DeviceDelayParams
+from .returns import expected_return, optimal_loads
+
+
+@dataclasses.dataclass(frozen=True)
+class RedundancyPlan:
+    """Output of the two-step optimization.
+
+    loads:        (n,) systematic points each edge device processes per epoch
+    c:            parity rows processed by the server per epoch (coding redundancy)
+    t_star:       epoch deadline in seconds
+    p_return:     (n+1,) Pr{T_i <= t*} at the optimized loads (server last)
+    expected_agg: aggregate expected return at t* (should be ~ m)
+    """
+
+    loads: np.ndarray
+    c: int
+    t_star: float
+    p_return: np.ndarray
+    expected_agg: float
+
+    @property
+    def delta(self) -> float:
+        """Redundancy metric delta = c / m over the edge devices' total data."""
+        return float(self.c) / float(self.loads_cap_total)
+
+    loads_cap_total: int = 0
+
+
+def _fleet_with_server(edge: DeviceDelayParams,
+                       server: DeviceDelayParams) -> DeviceDelayParams:
+    if server.n != 1:
+        raise ValueError("server params must describe exactly one device")
+    return DeviceDelayParams(
+        np.concatenate([edge.a, server.a]),
+        np.concatenate([edge.mu, server.mu]),
+        np.concatenate([edge.tau, server.tau]),
+        np.concatenate([edge.p, server.p]),
+    )
+
+
+def aggregate_return(fleet: DeviceDelayParams, caps: np.ndarray,
+                     t: float) -> tuple[float, np.ndarray, np.ndarray]:
+    """max_load E[R(t)] plus the argmax loads and per-device return probs."""
+    loads, vals = optimal_loads(fleet, caps, t)
+    from .delay_model import total_cdf
+    probs = total_cdf(fleet, loads, t)
+    return float(np.sum(vals)), loads, probs
+
+
+def solve_redundancy(edge: DeviceDelayParams, server: DeviceDelayParams,
+                     data_sizes: np.ndarray, c_up: int | None = None,
+                     eps_rel: float = 1e-3, t_hi: float | None = None,
+                     fixed_c: int | None = None) -> RedundancyPlan:
+    """Run the two-step optimization.
+
+    edge:       delay params of the n client devices
+    server:     delay params of the central server (tau=0: no comm leg)
+    data_sizes: (n,) local dataset sizes ell_i
+    c_up:       max parity rows the server may receive (default: m)
+    fixed_c:    if given, skip the redundancy search and use exactly this c
+                (delta-sweep mode for Fig. 2 / Fig. 5); the server cap is
+                fixed_c and the target return stays m.
+    """
+    data_sizes = np.asarray(data_sizes, dtype=np.int64)
+    m = int(data_sizes.sum())
+    if c_up is None:
+        c_up = m
+    server_cap = int(fixed_c) if fixed_c is not None else int(c_up)
+    fleet = _fleet_with_server(edge, server)
+    caps = np.concatenate([data_sizes, [server_cap]])
+
+    # --- bracket t*: find t_hi with E[R] >= m ------------------------------
+    if t_hi is None:
+        t_hi = float(np.max(fleet.mean_total(caps))) + 1.0
+    t_lo = 0.0
+    agg, loads, probs = aggregate_return(fleet, caps, t_hi)
+    guard = 0
+    while agg < m:
+        t_hi *= 2.0
+        agg, loads, probs = aggregate_return(fleet, caps, t_hi)
+        guard += 1
+        if guard > 60:
+            raise RuntimeError(
+                "cannot reach aggregate expected return m: the fleet cannot "
+                f"return {m} points in finite time (best {agg:.1f})")
+
+    # --- bisection on t (E[R] is nondecreasing in t) ------------------------
+    for _ in range(64):
+        t_mid = 0.5 * (t_lo + t_hi)
+        agg_mid, loads_mid, probs_mid = aggregate_return(fleet, caps, t_mid)
+        if agg_mid >= m:
+            t_hi, agg, loads, probs = t_mid, agg_mid, loads_mid, probs_mid
+        else:
+            t_lo = t_mid
+        if (t_hi - t_lo) <= eps_rel * max(t_hi, 1e-12):
+            break
+
+    c = int(loads[-1]) if fixed_c is None else int(fixed_c)
+    return RedundancyPlan(
+        loads=loads[:-1].astype(np.int64),
+        c=c,
+        t_star=float(t_hi),
+        p_return=probs,
+        expected_agg=float(agg),
+        loads_cap_total=m,
+    )
+
+
+def systematic_weights(plan: RedundancyPlan, data_sizes: np.ndarray) -> list[np.ndarray]:
+    """Per-device diagonal weight vectors (Eq. 17).
+
+    For device i: the first ell*_i points (the ones it will process) get
+    w = sqrt(Pr{T_i >= t*}); the remaining (punctured) points get w = 1.
+    Returns a list of (ell_i,) arrays — devices may have unequal data sizes.
+    """
+    data_sizes = np.asarray(data_sizes, dtype=np.int64)
+    out = []
+    for i, ell_i in enumerate(data_sizes):
+        w = np.ones(int(ell_i), dtype=np.float64)
+        k = int(plan.loads[i])
+        w[:k] = np.sqrt(max(0.0, 1.0 - plan.p_return[i]))
+        out.append(w)
+    return out

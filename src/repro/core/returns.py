@@ -1,0 +1,56 @@
+"""Expected-return metric and per-device load optimization (paper §III-B).
+
+R_i(t; ell~) = ell~ * 1{T_i <= t}  (indicator return metric),
+E[R_i(t; ell~)] = ell~ * Pr{T_i <= t},  concave in ell~ (paper Fig. 1).
+
+Step 1 of the two-step optimization (Eqs. 14-15):
+
+    ell*_i(t) = argmax_{0 <= ell~ <= ell_i}  E[R_i(t; ell~)]
+
+ell~ is an integer number of training points; the per-device cap is the local
+dataset size ell_i (or c_up for the server's parity budget).  Loads are small
+(hundreds to a few thousand) so an exact vectorized grid search is both exact
+and fast — no continuous relaxation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .delay_model import DeviceDelayParams, total_cdf
+
+
+def expected_return(params: DeviceDelayParams, ell, t) -> np.ndarray:
+    """E[R_i(t; ell)] = ell * Pr{T_i <= t}, vectorized over devices."""
+    ell = np.broadcast_to(np.asarray(ell, dtype=np.float64), params.a.shape)
+    return ell * total_cdf(params, ell, t)
+
+
+def optimal_loads(params: DeviceDelayParams, caps: np.ndarray, t: float,
+                  chunk: int = 4096) -> tuple[np.ndarray, np.ndarray]:
+    """Exact integer argmax of E[R_i(t; ell)] over 0..caps[i] per device.
+
+    Returns (ell_star (n,) int array, expected return at ell_star (n,)).
+
+    Grid-searches all integer loads at once: builds an (n, L+1) matrix of
+    expected returns where L = max cap.  Memory is chunked along the load
+    axis so server caps of ~10^5 stay cheap.
+    """
+    caps = np.asarray(caps, dtype=np.int64)
+    n = params.n
+    l_max = int(caps.max())
+    best_val = np.zeros(n, dtype=np.float64)
+    best_ell = np.zeros(n, dtype=np.int64)
+    for lo in range(1, l_max + 1, chunk):
+        hi = min(lo + chunk - 1, l_max)
+        loads = np.arange(lo, hi + 1, dtype=np.float64)  # (L,)
+        # E[R] for every device at every load in this chunk: (L, n)
+        vals = np.stack([expected_return(params, l, t) for l in loads], axis=0)
+        # mask loads above each device's cap
+        mask = loads[:, None] <= caps[None, :]
+        vals = np.where(mask, vals, -np.inf)
+        idx = np.argmax(vals, axis=0)  # (n,)
+        chunk_best = vals[idx, np.arange(n)]
+        better = chunk_best > best_val
+        best_val = np.where(better, chunk_best, best_val)
+        best_ell = np.where(better, loads[idx].astype(np.int64), best_ell)
+    return best_ell, best_val

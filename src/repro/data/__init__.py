@@ -1,0 +1,7 @@
+"""Synthetic data pipelines: the paper's linreg generator and an LM token
+stream with client partitioning for federated runs."""
+from .synthetic import linreg_dataset, token_batches
+from .partition import partition_iid, partition_noniid
+
+__all__ = ["linreg_dataset", "token_batches", "partition_iid",
+           "partition_noniid"]

@@ -1,0 +1,7 @@
+"""Federated substrate: straggler-aware load allocation + deadline-masked
+aggregation for arbitrary models, and the exact coded-head path."""
+from .trainer import FedConfig, FedState, fed_setup, fed_round, fed_train
+from .coded_head import train_coded_head
+
+__all__ = ["FedConfig", "FedState", "fed_setup", "fed_round", "fed_train",
+           "train_coded_head"]

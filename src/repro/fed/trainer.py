@@ -1,0 +1,159 @@
+"""Straggler-aware federated training for arbitrary (non-linear) models.
+
+The paper's exact parity-gradient identity needs a linear model + squared
+loss (DESIGN.md §4), so for the assigned deep architectures we integrate the
+*protocol-level* parts of CFL, which are model-agnostic:
+
+  1. **Load allocation (Eqs. 14-16)** — each client's per-round microbatch
+     ell*_i is chosen to maximize its expected return by the deadline, and
+     the deadline t* is the smallest that covers the global batch in
+     expectation.  Here a "data point" is one training sequence.
+  2. **Deadline-masked aggregation** — per round, each client's sampled
+     T_i <= t* decides whether its partial gradient lands; missing clients
+     are compensated by inverse-probability (1/p_i) importance scaling so
+     the aggregate stays unbiased (the FedSGD analogue of Eq. 19's
+     bias-correction-by-weighting).
+
+One jitted train step serves every round: client contributions enter as a
+weighted per-sequence mask, so the backward pass is a single (masked) batch
+gradient — exactly what the pjit data-parallel step computes, with clients
+laid out along the `data` mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delay_model import DeviceDelayParams, sample_total, total_cdf
+from repro.core.redundancy import RedundancyPlan, solve_redundancy
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_clients: int
+    sequences_per_client: int       # local dataset size (in sequences)
+    target_sequences: int           # global batch the server wants per round
+    deadline_quantile: float = 1.0  # scale t* (1.0 = Eq. 16 deadline)
+    min_return_prob: float = 1e-3   # clients below this are never scheduled
+
+
+@dataclasses.dataclass
+class FedState:
+    plan: RedundancyPlan
+    p_return: np.ndarray            # (n,) Pr{T_i <= t*}
+    edge: DeviceDelayParams
+    round_idx: int = 0
+    wall_clock: float = 0.0
+
+
+def fed_setup(edge: DeviceDelayParams, cfg: FedConfig) -> FedState:
+    """Run the Eq. 14-16 load allocation over sequences-as-points.
+
+    The server is modelled with zero capacity (no parity for non-linear
+    models) by giving it an infinitesimal budget: redundancy c is forced
+    to 0 and the aggregate-return target is the requested global batch.
+    """
+    server = DeviceDelayParams(a=np.array([1e-9]), mu=np.array([1e9]),
+                               tau=np.zeros(1), p=np.zeros(1))
+    sizes = np.full(cfg.n_clients, cfg.sequences_per_client, dtype=np.int64)
+    # fixed_c = 0: pure load allocation, no parity (Eq. 16 with c == 0).
+    # The achievable aggregate is sum(sizes); cap the target accordingly.
+    target = min(cfg.target_sequences, int(sizes.sum()))
+    # solve_redundancy targets m = sum(sizes); we want `target`, so feed
+    # scaled sizes whose total is `target` as caps? No — caps must stay the
+    # local dataset sizes.  Instead we bisect on t ourselves.
+    plan = _solve_loads(edge, sizes, target)
+    p = total_cdf(edge, plan.loads, plan.t_star)
+    return FedState(plan=plan, p_return=p, edge=edge)
+
+
+def _solve_loads(edge: DeviceDelayParams, sizes: np.ndarray,
+                 target: int) -> RedundancyPlan:
+    from repro.core.returns import optimal_loads
+    t_hi = float(np.max(edge.mean_total(sizes))) + 1.0
+    loads, vals = optimal_loads(edge, sizes, t_hi)
+    guard = 0
+    while float(vals.sum()) < target:
+        t_hi *= 2
+        loads, vals = optimal_loads(edge, sizes, t_hi)
+        guard += 1
+        if guard > 60:
+            raise RuntimeError("fleet cannot reach the target batch")
+    t_lo = 0.0
+    for _ in range(48):
+        t_mid = 0.5 * (t_lo + t_hi)
+        l_mid, v_mid = optimal_loads(edge, sizes, t_mid)
+        if float(v_mid.sum()) >= target:
+            t_hi, loads, vals = t_mid, l_mid, v_mid
+        else:
+            t_lo = t_mid
+        if t_hi - t_lo < 1e-4 * max(t_hi, 1e-9):
+            break
+    probs = total_cdf(edge, loads, t_hi)
+    return RedundancyPlan(loads=loads, c=0, t_star=float(t_hi),
+                          p_return=np.append(probs, 1.0),
+                          expected_agg=float(vals.sum()),
+                          loads_cap_total=int(sizes.sum()))
+
+
+def masked_loss(loss_per_seq_fn: Callable, params, batch: dict,
+                seq_weights: jax.Array):
+    """Weighted mean of per-sequence losses.
+
+    loss_per_seq_fn(params, batch) -> (B,) per-sequence losses;
+    seq_weights: (B,) — 0 for dropped/straggling sequences, 1/p_i for
+    received ones (importance-scaled, unbiased)."""
+    per_seq = loss_per_seq_fn(params, batch)
+    denom = jnp.maximum(jnp.sum(seq_weights > 0), 1)
+    return jnp.sum(per_seq * seq_weights) / denom
+
+
+def round_weights(state: FedState, rng: np.random.Generator,
+                  batch_clients: np.ndarray) -> tuple[np.ndarray, float]:
+    """Sample one round's arrivals.
+
+    batch_clients: (B,) client id of each sequence in the global batch
+    (sequences are laid out client-major along the data axis).
+    Returns (seq_weights (B,), round wall time = t*)."""
+    t_i = sample_total(state.edge, state.plan.loads, rng)
+    received = (t_i <= state.plan.t_star) & (state.plan.loads > 0)
+    p = np.clip(state.p_return, 1e-3, 1.0)
+    w_client = np.where(received, 1.0 / p, 0.0)        # unbiased masking
+    return w_client[batch_clients], float(state.plan.t_star)
+
+
+def fed_round(state: FedState, grad_fn, params, opt: Optimizer, opt_state,
+              batch: dict, batch_clients: np.ndarray,
+              rng: np.random.Generator):
+    """One synchronous round: sample arrivals, masked gradient, update."""
+    w, dt = round_weights(state, rng, batch_clients)
+    loss, grads = grad_fn(params, batch, jnp.asarray(w, dtype=jnp.float32))
+    updates, opt_state = opt.update(grads, opt_state, params)
+    params = apply_updates(params, updates)
+    state.round_idx += 1
+    state.wall_clock += dt
+    return params, opt_state, float(loss)
+
+
+def fed_train(state: FedState, grad_fn, params, opt: Optimizer,
+              batches: Iterator[tuple[dict, np.ndarray]], n_rounds: int,
+              seed: int = 0, log_every: int = 0):
+    """Run n_rounds of federated training; returns (params, losses)."""
+    rng = np.random.default_rng(seed)
+    opt_state = opt.init(params)
+    losses = []
+    for r in range(n_rounds):
+        batch, batch_clients = next(batches)
+        params, opt_state, loss = fed_round(
+            state, grad_fn, params, opt, opt_state, batch, batch_clients, rng)
+        losses.append(loss)
+        if log_every and (r + 1) % log_every == 0:
+            print(f"round {r+1}: loss {loss:.4f} "
+                  f"wall {state.wall_clock:.1f}s")
+    return params, losses

@@ -1,0 +1,27 @@
+"""jit'd wrapper for the fused LSQ-gradient kernel.
+
+On CPU (no TPU backend) the kernel body runs in interpret mode — same
+lowering, Python-evaluated — so correctness is validated everywhere while
+the BlockSpec tiling targets TPU VMEM.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import coded_grad as _k
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lsq_gradient(a: jax.Array, y: jax.Array, beta: jax.Array,
+                 block_m: int = _k.DEFAULT_BLOCK_M,
+                 force_interpret: bool = False) -> jax.Array:
+    """Fused A^T(A beta - y); falls back to interpret mode off-TPU."""
+    return _k.lsq_gradient(a, y, beta, block_m=block_m,
+                           interpret=force_interpret or not _on_tpu())
+
+
+reference = _ref.lsq_gradient

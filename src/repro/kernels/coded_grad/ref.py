@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused least-squares gradient."""
+import jax
+import jax.numpy as jnp
+
+
+def lsq_gradient(a: jax.Array, y: jax.Array, beta: jax.Array) -> jax.Array:
+    """g = A^T (A beta - y).  a: (M, D), y: (M,), beta: (D,) -> (D,)."""
+    r = a @ beta - y
+    return a.T @ r

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused weighted parity encoding P = G (W X)  (Eq. 9).
+
+The client-side one-time encoding multiplies the private generator matrix
+G (c x ell) into the weighted local dataset.  The naive form materializes
+W X (an ell x d HBM round-trip); the kernel fuses the diagonal scaling into
+the matmul's RHS load, so X streams HBM->VMEM once and W X never exists in
+HBM.
+
+Tiling: grid (c/bc, d/bd, ell/bl) with an fp32 VMEM accumulator per (bc, bd)
+output tile; the contraction dim ell is the innermost (sequential) grid axis
+so the accumulator stays resident.  Tile sizes default to MXU-aligned 128s.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (128, 128, 128)  # (bc, bd, bl)
+
+
+def _kernel(g_ref, w_ref, x_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...]                       # (bc, bl)
+    w = w_ref[...]                       # (1, bl)
+    x = x_ref[...]                       # (bl, bd)
+    xw = x * w[0][:, None].astype(x.dtype)   # fused diagonal scaling
+    out_ref[...] += jax.lax.dot(g, xw,
+                                preferred_element_type=jnp.float32
+                                ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def encode_parity(g: jax.Array, w: jax.Array, x: jax.Array,
+                  block: tuple[int, int, int] = DEFAULT_BLOCK,
+                  interpret: bool = False) -> jax.Array:
+    """P = G @ (diag(w) X).  g: (C, L), w: (L,), x: (L, D) -> (C, D)."""
+    c, ell = g.shape
+    ell2, d = x.shape
+    assert ell == ell2 and w.shape == (ell,)
+    bc, bd, bl = block
+    bc, bd, bl = min(bc, c), min(bd, d), min(bl, ell)
+    pc, pd, pL = (-c) % bc, (-d) % bd, (-ell) % bl
+    if pc or pL:
+        g = jnp.pad(g, ((0, pc), (0, pL)))
+    if pL or pd:
+        x = jnp.pad(x, ((0, pL), (0, pd)))
+    if pL:
+        w = jnp.pad(w, (0, pL))
+    grid = (g.shape[0] // bc, x.shape[1] // bd, g.shape[1] // bl)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, bl), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, bl), lambda i, j, k: (0, k)),
+            pl.BlockSpec((bl, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bc, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((g.shape[0], x.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(g, w[None, :], x)
+    return out[:c, :d].astype(x.dtype)

@@ -1,0 +1,21 @@
+"""jit'd wrapper for the fused parity-encoding kernel (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from . import encode as _k
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def encode_parity(g: jax.Array, w: jax.Array, x: jax.Array,
+                  block=_k.DEFAULT_BLOCK,
+                  force_interpret: bool = False) -> jax.Array:
+    return _k.encode_parity(g, w, x, block=block,
+                            interpret=force_interpret or not _on_tpu())
+
+
+reference = _ref.encode_parity

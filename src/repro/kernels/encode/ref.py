@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused weighted parity encoding."""
+import jax
+import jax.numpy as jnp
+
+
+def encode_parity(g: jax.Array, w: jax.Array, x: jax.Array) -> jax.Array:
+    """P = G @ (diag(w) X).  g: (C, L), w: (L,), x: (L, D) -> (C, D)."""
+    return g @ (w[:, None] * x)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+The §Perf A3 finding: plain attention materializes (B, H, S, T) score
+tensors in HBM — at prefill_32k that is the dominant memory-term
+contributor.  Flash attention streams (bq x d) query blocks and (bk x d)
+KV blocks through VMEM, carrying the online-softmax state (running max m,
+normalizer l, fp32 accumulator) in VMEM scratch across the sequential KV
+grid axis; scores never touch HBM.
+
+Grid: (B*H, S/bq, T/bk) — the KV axis is innermost, so the scratch carry
+is valid under TPU's sequential grid semantics.  Causal blocks strictly
+above the diagonal are skipped with pl.when (their loads are still
+prefetched by the BlockSpec pipeline; on TPU the MXU work is what matters).
+
+Block defaults 512x512: VMEM working set ~ (2*bk*d + bq*d) bf16
++ (bq*bk + 2*bq*d) fp32 ~ 2.6 MB at d=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, bq: int, bk: int, n_kv: int):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = q_idx * bq
+    kv_start = kv_idx * bk
+
+    @pl.when(kv_start <= q_start + bq - 1)  # any causal overlap
+    def _update():
+        q = q_ref[0].astype(jnp.float32)               # (bq, d)
+        k = k_ref[0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                   # (bq, bk)
+        iq = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        jk = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(jk <= iq, s, NEG_INF)
+
+        m_prev = m_ref[...]                             # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                          # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK,
+                     interpret: bool = False) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D), causal."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    if S % bq or T % bk:
+        raise ValueError(f"S={S} / T={T} must divide blocks ({bq}, {bk})")
+    scale = 1.0 / (D ** 0.5)
+    bh = B * H
+    qf = q.reshape(bh, S, D)
+    kf = k.reshape(bh, T, D)
+    vf = v.reshape(bh, T, D)
+    n_kv = T // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bq=bq, bk=bk, n_kv=n_kv),
+        grid=(bh, S // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # online-softmax accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running normalizer l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: causal softmax attention (scores materialized)."""
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D), causal, fp32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    s = s / jnp.sqrt(d)
+    S = q.shape[2]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)

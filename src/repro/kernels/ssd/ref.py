@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the SSD intra-chunk computation: re-exports the
+model-side reference so kernel tests and the model stay in lockstep."""
+from repro.models.ssm import ssd_chunk_reference
+
+__all__ = ["ssd_chunk_reference"]

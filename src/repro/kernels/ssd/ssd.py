@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block (arXiv:2405.21060).
+
+Per (batch, chunk, head) the kernel computes, entirely in VMEM:
+
+    y_diag[q, p] = sum_t  (C_q . B_t) * L[q, t] * (dt_t x_t)[p]
+    state[p, n]  = sum_q  decay_out[q] * (dt_q x_q)[p] * B_q[n]
+
+where L[q, t] = exp(cumsum(dA)_q - cumsum(dA)_t) for t <= q (the causal
+decay kernel) and decay_out[q] = exp(cumsum_end - cumsum_q).
+
+This is the flash-linear-attention layout adapted to the MXU: the (Q x Q)
+score matrix C B^T and the (Q x P) output are matmuls; the decay mask is an
+elementwise VPU op.  One grid step handles one (b, chunk, head): chunk
+Q = 128..256 and headdim P = 64 keep the working set (~Q*(2N + P + Q) fp32)
+well under VMEM.
+
+The inter-chunk state recurrence stays in jax.lax.scan (O(S/Q) tiny steps) —
+see repro.models.ssm.ssd_chunked, which calls this kernel for the heavy part.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, state_ref):
+    # refs are (1, 1, Q, 1, ...) blocks -> squeeze to chunk-local arrays
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0, :, 0]                             # (Q,)
+    da = da_ref[0, 0, :, 0]                             # (Q,) fp32 decay logs
+    b = b_ref[0, 0, :, 0, :].astype(jnp.float32)        # (Q, N)
+    c = c_ref[0, 0, :, 0, :].astype(jnp.float32)        # (Q, N)
+
+    xw = x * dt[:, None]                                # dt-weighted input
+    cum = jnp.cumsum(da)                                # (Q,)
+    # causal decay kernel L[q, t] = exp(cum_q - cum_t), t <= q
+    diff = cum[:, None] - cum[None, :]
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 0)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 1)
+    lmat = jnp.where(t_idx <= q_idx, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot(c, b.T, preferred_element_type=jnp.float32)
+    y = jax.lax.dot(scores * lmat, xw,
+                    preferred_element_type=jnp.float32)  # (Q, P)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay_out = jnp.exp(cum[-1] - cum)                  # (Q,)
+    state = jax.lax.dot((xw * decay_out[:, None]).T, b,
+                        preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[0, 0, 0, :, :] = state.astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(xc: jax.Array, dtc: jax.Array, da: jax.Array, bc: jax.Array,
+              cc: jax.Array, interpret: bool = False):
+    """Intra-chunk SSD.
+
+    xc (B, nc, Q, H, P), dtc (B, nc, Q, H), da (B, nc, Q, H) fp32,
+    bc/cc (B, nc, Q, H, N).
+    Returns (y_diag (B, nc, Q, H, P) fp32, states (B, nc, H, P, N) fp32).
+    """
+    B, nc, Q, H, P = xc.shape
+    N = bc.shape[-1]
+    grid = (B, nc, H)
+
+    y, states = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, n, h: (b, n, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, n, h: (b, n, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, n, h: (b, n, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1, N), lambda b, n, h: (b, n, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1, N), lambda b, n, h: (b, n, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, n, h: (b, n, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, n, h: (b, n, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, dtc.astype(jnp.float32), da, bc, cc)
+    return y, states

@@ -1,0 +1,80 @@
+"""Multi-host bootstrap for the production pod(s).
+
+On a real v5e deployment every host runs the same entry point; this module
+wires `jax.distributed.initialize` from the standard launcher environment
+(GKE/JobSet or `gcloud compute tpus tpu-vm ssh --worker=all`) and validates
+that the global device count matches the requested mesh before any
+computation starts.
+
+    # per-host entry (same command on all hosts):
+    python -m repro.launch.train --arch granite-8b --distributed ...
+
+Environment (auto-detected on TPU VMs; explicit for CPU/GPU clusters):
+    COORDINATOR_ADDRESS   host:port of process 0
+    NUM_PROCESSES         total process count
+    PROCESS_ID            this process's rank
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def initialize_distributed(coordinator: Optional[str] = None,
+                           num_processes: Optional[int] = None,
+                           process_id: Optional[int] = None,
+                           auto: bool = False) -> bool:
+    """Initialize the JAX distributed runtime if a cluster env is present.
+
+    Returns True when multi-process mode is active.  Explicit signals only:
+    either a coordinator address (argument or COORDINATOR_ADDRESS env) or
+    `auto=True` on a TPU VM, where jax.distributed.initialize() self-
+    discovers the slice topology.  (Do NOT sniff TPU_SKIP_MDS_QUERY — jax
+    sets it itself during platform probing.)  Safe no-op otherwise."""
+    coordinator = coordinator or os.environ.get("COORDINATOR_ADDRESS")
+    num_processes = num_processes or _int_env("NUM_PROCESSES")
+    process_id = process_id if process_id is not None else _int_env(
+        "PROCESS_ID")
+    if coordinator is None and not auto:
+        return False
+    if coordinator is None:
+        jax.distributed.initialize()  # TPU-VM auto-detection
+    else:
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+    return jax.process_count() > 1
+
+
+def _int_env(name: str) -> Optional[int]:
+    v = os.environ.get(name)
+    return int(v) if v is not None else None
+
+
+def validate_mesh_capacity(*, multi_pod: bool = False) -> None:
+    """Fail fast if the cluster doesn't provide the production chip count."""
+    from .mesh import MULTI_POD_SHAPE, SINGLE_POD_SHAPE
+    import numpy as np
+    want = int(np.prod(MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE))
+    have = jax.device_count()
+    if have != want:
+        raise RuntimeError(
+            f"mesh needs {want} devices, cluster exposes {have}; "
+            f"for a dry run use repro.launch.dryrun (placeholder devices)")
+
+
+def is_coordinator() -> bool:
+    return jax.process_index() == 0
+
+
+def sync_hosts(name: str = "barrier") -> None:
+    """Cross-host barrier (e.g. before checkpoint publish)."""
+    if jax.process_count() > 1:
+        # tiny all-reduce doubles as a barrier
+        import jax.numpy as jnp
+        x = jnp.ones(())
+        jax.block_until_ready(
+            jax.pmap(lambda v: jax.lax.psum(v, "i"), axis_name="i")(
+                x[None]))

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with 512 placeholder host devices standing in for the
+chips.  No arrays are ever allocated: params/opt-state/batch/caches are all
+ShapeDtypeStructs via jax.eval_shape.
+
+For each combination we record:
+  * memory_analysis()  — bytes per device (proves the sharding fits),
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline terms,
+  * collective bytes   — parsed from the compiled HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+     collective-permute operand sizes).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+Results accumulate into the JSON so the full 10x4x2 sweep can run
+incrementally.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED, INPUT_SHAPES, get_config, input_specs,
+                           list_archs)
+from repro.configs.base import ArchConfig
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   opt_state_shardings, param_shardings,
+                                   replicated)
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import transformer as T
+from repro.optim.optimizers import make_optimizer
+
+# >40B models run bf16 optimizer moments so state fits HBM (DESIGN.md §5)
+from repro.launch.sharding import FSDP_ARCHS
+
+
+# winning §Perf recipes per architecture family (EXPERIMENTS.md §Perf):
+# applied by --optimized to record the beyond-paper-optimized table next to
+# the paper-faithful baseline.
+import dataclasses as _dc
+
+
+def optimize_config(cfg: ArchConfig, kind: str = "train") -> ArchConfig:
+    """kind: train | prefill | decode.  The repeat-KV attention recipe only
+    pays off for full-sequence passes; at decode it would materialize the
+    R-fold repeated KV cache (measured 2-9x regression), so decode keeps the
+    grouped path."""
+    repl: dict = {}
+    if kind in ("train", "prefill") and cfg.n_heads             and cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        repl["attn_impl"] = "repeat"
+        repl["softmax_dtype"] = "bf16"
+        if cfg.n_heads % 16 != 0 and cfg.n_heads > 16:
+            # heads don't divide the model axis: pad-shard the score head
+            # dim explicitly or SPMD replicates the (B,H,S,T) tensor
+            repl["attn_seq_shard"] = "head"
+    if cfg.ssm is not None:
+        repl["ssm"] = _dc.replace(cfg.ssm, head_shard=True)
+    if cfg.moe is not None:
+        repl["moe"] = _dc.replace(cfg.moe, capacity_factor=1.25)
+    return _dc.replace(cfg, **repl) if repl else cfg
+
+
+def _maybe_sliding_window(cfg: ArchConfig, shape_name: str) -> ArchConfig:
+    """long_500k on a full-attention arch runs the sliding-window variant."""
+    if shape_name == "long_500k" and not cfg.supports_shape("long_500k"):
+        if cfg.arch_type in ("dense", "moe", "vlm"):
+            return cfg.with_sliding_window(8192)
+    return cfg
+
+
+def plan_combinations(archs, shapes):
+    """All (arch, shape, effective_cfg) combos that lower; skips recorded."""
+    combos, skips = [], []
+    for a in archs:
+        base = get_config(a)
+        for s in shapes:
+            cfg = _maybe_sliding_window(base, s)
+            if cfg.supports_shape(s):
+                combos.append((a, s, cfg))
+            else:
+                skips.append((a, s, "no sub-quadratic attention variant"))
+    return combos, skips
+
+
+def lower_one(cfg: ArchConfig, shape_name: str, mesh,
+              opt_name: str = "adamw", remat="full", zero1: bool = False):
+    """Lower + compile one (arch, shape) on `mesh`; returns stats dict."""
+    spec = INPUT_SHAPES[shape_name]
+    kind = spec["kind"]
+    batch_sds = input_specs(cfg, shape_name)
+
+    params_sds = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0),
+                              dtype=jnp.bfloat16))
+    p_sh = param_shardings(cfg, mesh, params_sds)
+    b_sh = batch_shardings(cfg, mesh, batch_sds)
+
+    t0 = time.time()
+    if kind == "train":
+        from repro.launch.sharding import base_arch_name
+        state_dtype = jnp.bfloat16 if base_arch_name(cfg.name) in FSDP_ARCHS \
+            else jnp.float32
+        opt = make_optimizer(opt_name, 1e-4, state_dtype=state_dtype)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        o_sh = opt_state_shardings(mesh, p_sh, opt_sds, zero1=zero1)
+        step = make_train_step(
+            cfg, opt, remat=remat if remat != "full" else True)
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, replicated(mesh, {"loss": 0.0, "moe_aux_loss": 0.0}
+                                                               if cfg.moe else {"loss": 0.0})),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+    elif kind == "prefill":
+        step = make_prefill_step(cfg)
+        cache_sds = jax.eval_shape(
+            lambda: T.init_cache(cfg, spec["global_batch"], spec["seq_len"],
+                                 dtype=jnp.bfloat16))
+        c_sh = cache_shardings(cfg, mesh, cache_sds)
+        logits_sds = jax.ShapeDtypeStruct(
+            (spec["global_batch"], 1, cfg.vocab), jnp.float32)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(batch_shardings(cfg, mesh,
+                                                        logits_sds), c_sh))
+        with mesh:
+            lowered = jitted.lower(params_sds, batch_sds)
+    else:  # decode
+        step = make_decode_step(cfg)
+        cache_sds = jax.eval_shape(
+            lambda: T.init_cache(cfg, spec["global_batch"], spec["seq_len"],
+                                 dtype=jnp.bfloat16))
+        c_sh = cache_shardings(cfg, mesh, cache_sds)
+        logits_sds = jax.ShapeDtypeStruct(
+            (spec["global_batch"], 1, cfg.vocab), jnp.float32)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                         out_shardings=(batch_shardings(cfg, mesh,
+                                                        logits_sds), c_sh),
+                         donate_argnums=(2,))
+        with mesh:
+            lowered = jitted.lower(params_sds, batch_sds, cache_sds)
+
+    compiled = lowered.compile()
+    dt = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = hlo_stats.collective_bytes(hlo_text)
+    # trip-count-corrected totals (XLA cost_analysis counts scan bodies once)
+    from repro.roofline.hlo_graph import module_stats
+    corrected = module_stats(hlo_text)
+    n_params = sum(x.size for x in jax.tree.leaves(params_sds))
+    stats = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": mesh.devices.size,
+        "n_params": int(n_params),
+        "compile_s": round(dt, 1),
+        "flops": float(cost.get("flops", -1.0)),
+        "hlo_bytes": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes": coll,
+        "corrected_flops": corrected["flops"],
+        "corrected_bytes": corrected["bytes"],
+        "corrected_collectives": corrected["collectives"],
+        "memory": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size": getattr(mem,
+                                           "generated_code_size_in_bytes",
+                                           None),
+        },
+    }
+    return stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=[None] + list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf winning recipes (separate table)")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args(argv)
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    try:
+        with open(args.out) as f:
+            results = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        results = {"runs": {}, "skips": {}}
+
+    combos, skips = plan_combinations(archs, shapes)
+    for a, s, why in skips:
+        results["skips"][f"{a}|{s}"] = why
+        print(f"SKIP {a} x {s}: {why}")
+
+    n_fail = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "x".join(str(x) for x in mesh.devices.shape)
+        for a, s, cfg in combos:
+            key = f"{a}|{s}|{mesh_name}"
+            if key in results["runs"] and results["runs"][key].get("ok"):
+                print(f"CACHED {key}")
+                continue
+            print(f"RUN {key} ...", flush=True)
+            try:
+                kind = INPUT_SHAPES[s]["kind"]
+                run_cfg = optimize_config(cfg, kind) if args.optimized \
+                    else cfg
+                stats = lower_one(run_cfg, s, mesh,
+                                  remat="save_ar" if args.optimized
+                                  else "full",
+                                  zero1=args.optimized)
+                stats["ok"] = True
+                results["runs"][key] = stats
+                gb = (stats["memory"]["argument_size"] or 0) / 1e9
+                print(f"  ok: {stats['compile_s']}s compile, "
+                      f"{stats['flops']:.3e} flops, "
+                      f"args {gb:.2f} GB/dev, "
+                      f"coll {sum(stats['collective_bytes'].values()):.3e} B")
+            except Exception as e:  # noqa: BLE001 — record and continue
+                n_fail += 1
+                results["runs"][key] = {"ok": False, "error": str(e)[:2000]}
+                print(f"  FAIL: {e}")
+                traceback.print_exc()
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    print(f"done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

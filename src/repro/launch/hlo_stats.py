@@ -1,0 +1,68 @@
+"""HLO-text statistics: collective-communication bytes per op kind.
+
+`cost_analysis()` does not expose collective bytes, so we parse the compiled
+module text and sum the operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction.  Operand shapes
+are read from the instruction's result type (for all-reduce the result equals
+the operand; for all-gather the result is the gathered size — we count the
+*result* bytes, a consistent upper proxy for wire traffic).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[4,1024,512]{2,1,0} all-gather(...)
+#        ROOT %tuple = (f32[...], bf16[...]) tuple(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?P<type>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes across all shapes in a (possibly tuple) type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dtype")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result bytes per collective kind over the whole module.
+
+    `-start`/`-done` async pairs are counted once (on `-start`; bare ops
+    count normally)."""
+    out: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # counted at -start
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind").lower()
+        out[kind] += _shape_bytes(m.group("type"))
+        counts[kind] += 1
+    result = dict(out)
+    result.update({f"n_{k}": float(v) for k, v in counts.items()})
+    return result

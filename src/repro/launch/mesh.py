@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips over ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips over ("pod", "data", "model").
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run must set XLA_FLAGS before the first jax call.
+TPU v5e constants (roofline): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+SINGLE_POD_SHAPE = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD_SHAPE = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
+    """A tiny mesh over whatever devices exist (CPU tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The batch-parallel axes of a mesh (includes 'pod' when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

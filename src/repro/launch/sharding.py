@@ -1,0 +1,225 @@
+"""Per-architecture sharding rules.
+
+Name-pattern rules over the parameter tree produce PartitionSpecs:
+
+  * tensor parallel over "model": attention QKV/O output dims, MLP hidden,
+    vocab/embedding, MoE expert dim (expert parallel);
+  * FSDP over "data" for the >40B configs (phi3.5-moe, mistral-large,
+    llama4-maverick): the non-model-sharded major dim of every large matrix
+    is sharded over the data axis and all-gathered per layer inside the
+    scan body; optimizer states inherit the param specs (bf16 states for
+    these configs — see repro.optim);
+  * Mamba mixer params stay replicated over "model" (packed projection
+    boundaries do not align with shard boundaries; the models are <2B —
+    revisiting this is a recorded §Perf hillclimb candidate);
+  * batch (and KV caches' batch dim) over ("pod", "data"); KV head dim over
+    "model" when n_kv_heads is divisible, else head_dim over "model".
+
+Multi-pod: parameters are replicated across pods (the "pod" axis only
+carries batch parallelism); gradient all-reduce crosses the pod axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from .mesh import data_axes
+
+# configs large enough to need parameter (ZeRO-3 style) sharding over data
+FSDP_ARCHS = {"phi3.5-moe-42b-a6.6b", "mistral-large-123b",
+              "llama4-maverick-400b-a17b"}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % _axis_size(mesh, axis) == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(cfg: ArchConfig, mesh: Mesh, path: str,
+               shape: tuple[int, ...], fsdp: bool) -> P:
+    """PartitionSpec for one parameter leaf (name-pattern rules)."""
+    dd = "data" if fsdp else None  # FSDP shards the complementary dim
+    leaf = path.split("/")[-1]
+    stacked = path.split("/")[0] in (
+        "blocks", "moe_blocks", "cross_blocks", "enc_blocks")
+    lead = (None,) if stacked else ()
+
+    def spec(*axes):
+        out = lead + axes
+        # drop axes that don't divide
+        fixed = []
+        for dim, ax in zip(shape, out):
+            if ax is None:
+                fixed.append(None)
+            elif isinstance(ax, str):
+                fixed.append(ax if dim % _axis_size(mesh, ax) == 0 else None)
+            else:  # tuple of axes
+                size = int(np.prod([_axis_size(mesh, a) for a in ax]))
+                fixed.append(ax if dim % size == 0 else None)
+        return P(*fixed)
+
+    # --- embeddings / head -------------------------------------------------
+    if path == "embed":
+        return spec("model", dd)
+    if path == "lm_head":
+        return spec(dd, "model")
+
+    # --- MoE ----------------------------------------------------------------
+    if "/moe/" in path or path.endswith("/router"):
+        if leaf == "router":
+            return spec(None, None)
+        if leaf in ("w_gate", "w_up"):      # (E, D, F): expert parallel
+            return spec("model", dd, None)
+        if leaf == "w_down":                # (E, F, D)
+            return spec("model", dd, None)
+
+    # --- attention ----------------------------------------------------------
+    if leaf in ("wq",):
+        return spec(dd, "model")
+    if leaf in ("wk", "wv", "wkv"):
+        return spec(dd, "model")
+    if leaf == "wo":
+        return spec("model", dd)
+    if leaf in ("bq", "bk", "bv", "bkv"):
+        return spec("model")
+
+    # --- dense MLP ----------------------------------------------------------
+    if leaf in ("w_gate", "w_up", "w_gu"):
+        return spec(dd, "model")
+    if leaf == "w_down":
+        return spec("model", dd)
+
+    # --- mamba mixer -----------------------------------------------------
+    # packed projection boundaries do not align with model-axis shards, so
+    # tensor parallelism is off; under FSDP the big matrices still shard
+    # over data (§Perf iteration C1).
+    if leaf in ("w_in", "w_out"):
+        return spec(dd, None)
+    if leaf == "conv_w":
+        return spec(None, dd)
+    # norms, biases, gates, a_log, ... -> replicated
+    return P(*([None] * len(shape)))
+
+
+def base_arch_name(name: str) -> str:
+    """Strip variant suffixes (e.g. '-sw8192') to recover the base arch."""
+    return name.split("-sw")[0]
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shape: Any,
+                    fsdp: Optional[bool] = None) -> Any:
+    fsdp = base_arch_name(cfg.name) in FSDP_ARCHS if fsdp is None else fsdp
+
+    def one(path, leaf):
+        spec = param_spec(cfg, mesh, _path_str(path), leaf.shape, fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, batch_shape: Any) -> Any:
+    """tokens/targets (B, S) over batch axes; modality stubs likewise;
+    decode pos is replicated."""
+    baxes = data_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes]))
+
+    def one(path, leaf):
+        name = _path_str(path)
+        if name == "pos" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        first = baxes if b % bsize == 0 else (
+            ("data",) if b % _axis_size(mesh, "data") == 0 else None)
+        return NamedSharding(mesh, P(first, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, cache_shape: Any) -> Any:
+    """KV caches (L, B, T, G, hd): batch over data axes; heads over model
+    when divisible, else head_dim over model.  SSM state (L, B, H, P, N):
+    heads over model.  Conv cache (L, B, K, C): channels over model."""
+    baxes = data_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes]))
+
+    def bspec(b):
+        if b % bsize == 0:
+            return baxes
+        if b % _axis_size(mesh, "data") == 0:
+            return ("data",)
+        return None
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shp = leaf.shape
+        if "mamba" in name and name.endswith("ssm"):
+            # (L, B, H, P, N)
+            h_ax = "model" if _div(shp[2], mesh, "model") else None
+            return NamedSharding(mesh, P(None, bspec(shp[1]), h_ax, None,
+                                         None))
+        if "mamba" in name and name.endswith("conv"):
+            # (L, B, K, C)
+            c_ax = "model" if _div(shp[3], mesh, "model") else None
+            return NamedSharding(mesh, P(None, bspec(shp[1]), None, c_ax))
+        # attention / cross KV: (L, B, T, G, hd)
+        g, hd = shp[3], shp[4]
+        if _div(g, mesh, "model"):
+            return NamedSharding(mesh, P(None, bspec(shp[1]), None, "model",
+                                         None))
+        if _div(hd, mesh, "model"):
+            return NamedSharding(mesh, P(None, bspec(shp[1]), None, None,
+                                         "model"))
+        return NamedSharding(mesh, P(None, bspec(shp[1]), None, None, None))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def opt_state_shardings(mesh: Mesh, param_sh: Any, opt_state_shape: Any,
+                        zero1: bool = False) -> Any:
+    """Optimizer moments inherit the param specs; step is replicated.
+
+    zero1=True (ZeRO-1): moments of fully-replicated params are sharded
+    over `data` on their first divisible dim — optimizer memory drops
+    n_data-fold without the per-scan-iteration weight gathers that full
+    FSDP costs on stacked layer params (§Perf iteration C2)."""
+    def like(ps, leaf):
+        if zero1 and all(a is None for a in ps.spec):
+            for i, dim in enumerate(leaf.shape):
+                if dim % _axis_size(mesh, "data") == 0 and dim > 1:
+                    spec = [None] * len(leaf.shape)
+                    spec[i] = "data"
+                    return NamedSharding(mesh, P(*spec))
+        return ps
+
+    step_sh = NamedSharding(mesh, P())
+    mu = opt_state_shape.mu
+    nu = opt_state_shape.nu
+    from repro.optim.optimizers import OptState
+    return OptState(
+        step=step_sh,
+        mu=None if mu is None else jax.tree.map(like, param_sh, mu),
+        nu=None if nu is None else jax.tree.map(like, param_sh, nu),
+    )
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

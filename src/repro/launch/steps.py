@@ -1,0 +1,90 @@
+"""jit-able step functions (train / prefill / decode) shared by the real
+drivers and the multi-pod dry-run."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+def make_train_step(cfg: ArchConfig, opt: Optimizer,
+                    compute_dtype=jnp.bfloat16,
+                    remat: bool = True, clip_norm: float = 0.0,
+                    lr_schedule: Callable | None = None) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    clip_norm > 0 enables global-norm gradient clipping; lr_schedule(step)
+    scales the optimizer's base lr (repro.optim.schedules)."""
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return T.loss_fn(cfg, p, batch, compute_dtype=compute_dtype,
+                             remat=remat)
+
+        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        metrics = {"loss": loss}
+        if clip_norm > 0:
+            from repro.optim.schedules import clip_by_global_norm
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics["grad_norm"] = gnorm
+        scale = (lr_schedule(opt_state.step) if lr_schedule is not None
+                 else 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params,
+                                        lr_scale=scale)
+        params = apply_updates(params, updates)
+        if "moe_aux_loss" in aux:
+            metrics["moe_aux_loss"] = aux["moe_aux_loss"]
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_fed_train_step(cfg: ArchConfig, opt: Optimizer,
+                        compute_dtype=jnp.float32,
+                        remat: bool = False) -> Callable:
+    """Deadline-masked federated step: per-sequence weights (0 for dropped
+    clients, 1/p for received) make the aggregate unbiased (repro.fed)."""
+
+    def step(params, opt_state, batch, seq_weights):
+        def lf(p):
+            logits, aux = T.forward_train(cfg, p, batch,
+                                          compute_dtype=compute_dtype,
+                                          remat=remat)
+            targets = batch["targets"]
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, targets[..., None],
+                                       axis=-1)[..., 0]
+            per_seq = jnp.mean(nll, axis=-1)              # (B,)
+            denom = jnp.maximum(jnp.sum(seq_weights > 0), 1)
+            loss = jnp.sum(per_seq * seq_weights) / denom
+            if "moe_aux_loss" in aux:
+                loss = loss + 0.01 * aux["moe_aux_loss"]
+            return loss
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, compute_dtype=jnp.bfloat16,
+                      cache_len: int | None = None) -> Callable:
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch, compute_dtype=compute_dtype,
+                         cache_len=cache_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, compute_dtype=jnp.bfloat16) -> Callable:
+    def serve_step(params, batch, cache):
+        return T.decode_step(cfg, params, batch, cache,
+                             compute_dtype=compute_dtype)
+    return serve_step

@@ -1,0 +1,143 @@
+"""Training driver.
+
+Runs real training on the available devices (CPU here; the same step
+functions lower for the production mesh in dryrun.py).  Supports plain
+data-parallel training and the federated straggler-aware mode (deadline-
+masked aggregation with the Eq. 14-16 load allocation).
+
+  python -m repro.launch.train --arch lm-100m --steps 300 --batch 8 --seq 256
+  python -m repro.launch.train --arch granite-8b --reduced --federated
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config, list_archs
+from repro.data.synthetic import token_batches
+from repro.launch.steps import make_fed_train_step, make_train_step
+from repro.models import transformer as T
+from repro.optim.optimizers import make_optimizer
+
+
+def add_modality_stubs(batch: dict, cfg, key) -> dict:
+    B = batch["tokens"].shape[0]
+    if cfg.vlm:
+        batch["patches"] = 0.1 * jax.random.normal(
+            key, (B, cfg.vlm.n_patches, cfg.vlm.d_vision))
+    if cfg.encdec:
+        batch["frames"] = 0.1 * jax.random.normal(
+            key, (B, cfg.encdec.n_frames, cfg.d_model))
+    return batch
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lm-100m", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the family-preserving smoke variant")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="cosine schedule warmup steps (0 = constant lr)")
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="global-norm gradient clipping (0 = off)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="initialize jax.distributed from the cluster env")
+    ap.add_argument("--federated", action="store_true",
+                    help="straggler-aware deadline-masked aggregation")
+    ap.add_argument("--n-clients", type=int, default=8)
+    ap.add_argument("--nu", type=float, default=0.2,
+                    help="federated heterogeneity factor")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.distributed:
+        from repro.launch.distributed import initialize_distributed
+        multi = initialize_distributed()
+        print(f"distributed: {jax.process_count()} processes "
+              f"({'multi' if multi else 'single'}-host)")
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    opt = make_optimizer(args.optimizer, args.lr)
+    opt_state = opt.init(params)
+    it = token_batches(args.seed, batch=args.batch, seq_len=args.seq,
+                       vocab=cfg.vocab)
+
+    if args.federated:
+        from repro.fed import FedConfig, fed_setup
+        from repro.fed.trainer import round_weights
+        from repro.sim.network import paper_fleet
+        n_clients = min(args.n_clients, args.batch)
+        if n_clients != args.n_clients:
+            print(f"note: clamping n_clients to batch size ({n_clients})")
+        args.n_clients = n_clients
+        per_client = args.batch // args.n_clients
+        fleet = paper_fleet(args.nu, args.nu, seed=args.seed,
+                            n=args.n_clients, d=cfg.d_model)
+        fstate = fed_setup(fleet.edge, FedConfig(
+            n_clients=args.n_clients, sequences_per_client=per_client,
+            target_sequences=args.batch))
+        print(f"federated: t*={fstate.plan.t_star:.2f}s "
+              f"loads={fstate.plan.loads.tolist()}")
+        step = jax.jit(make_fed_train_step(cfg, opt))
+        batch_clients = np.repeat(np.arange(args.n_clients), per_client)
+        rng = np.random.default_rng(args.seed)
+    else:
+        schedule = None
+        if args.warmup > 0:
+            from repro.optim.schedules import cosine_with_warmup
+            schedule = cosine_with_warmup(1.0, args.warmup, args.steps)
+        step = jax.jit(make_train_step(cfg, opt, compute_dtype=jnp.float32,
+                                       remat=False,
+                                       clip_norm=args.clip_norm,
+                                       lr_schedule=schedule))
+
+    wall = 0.0
+    losses = []
+    t_start = time.time()
+    for s in range(1, args.steps + 1):
+        batch = add_modality_stubs(next(it), cfg, jax.random.fold_in(key, s))
+        if args.federated:
+            w, dt = round_weights(fstate, rng, batch_clients)
+            params, opt_state, metrics = step(
+                params, opt_state, batch, jnp.asarray(w, jnp.float32))
+            wall += dt
+        else:
+            params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if s % args.log_every == 0:
+            msg = (f"step {s:5d} loss {losses[-1]:.4f} "
+                   f"({(time.time()-t_start)/s:.2f}s/step)")
+            if args.federated:
+                msg += f" sim_wall {wall:.0f}s"
+            print(msg, flush=True)
+        if args.ckpt_dir and s % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, s,
+                            {"params": params, "opt": opt_state})
+    print(f"final loss {np.mean(losses[-10:]):.4f} "
+          f"(first 10: {np.mean(losses[:10]):.4f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,6 @@
+"""Model zoo: unified multi-family transformer + the paper's linear model."""
+from . import layers, moe, ssm, transformer
+from .linear import linreg_predict, linreg_loss
+
+__all__ = ["layers", "moe", "ssm", "transformer", "linreg_predict",
+           "linreg_loss"]

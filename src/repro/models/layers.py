@@ -1,0 +1,396 @@
+"""Transformer building blocks: norms, rotary embeddings, GQA attention
+(training, prefill, and single-token decode with optional sliding window),
+cross-attention, and MLPs.
+
+Conventions
+-----------
+* Params are plain nested dicts of jnp arrays; every init_* returns a dict.
+* Shapes: tokens (B, S), activations (B, S, D), attention heads (B, S, H, Dh).
+* `param_dtype` controls storage; matmuls run in `x.dtype` (the caller casts
+  activations, typically bf16 on TPU, fp32 in CPU tests).
+* GQA: n_heads = n_kv_heads * group; we compute scores with a grouped einsum
+  so KV heads are never materialized `group`-fold.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def init_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def init_ln(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype),
+            "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype, bias: bool = False,
+                   kv_input_dim: Optional[int] = None,
+                   fused: bool = False) -> dict:
+    """QKVO projections. `kv_input_dim` != d_model for cross-attention.
+    fused=True packs K and V into one `wkv` matrix so the backward dx
+    partial-sum needs ONE all-reduce instead of two (§Perf iteration 6);
+    the K/V halves sit on aligned shard boundaries (each G*hd divisible by
+    the model-axis size)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    kv_in = kv_input_dim or d_model
+    p = {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, dtype),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, dtype),
+    }
+    if fused:
+        p["wkv"] = dense_init(kk, kv_in, 2 * n_kv_heads * head_dim, dtype)
+    else:
+        p["wk"] = dense_init(kk, kv_in, n_kv_heads * head_dim, dtype)
+        p["wv"] = dense_init(kv, kv_in, n_kv_heads * head_dim, dtype)
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype=dtype)
+        if fused:
+            p["bkv"] = jnp.zeros((2 * n_kv_heads * head_dim,), dtype=dtype)
+        else:
+            p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype=dtype)
+            p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype=dtype)
+    return p
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, act: str = "swiglu",
+             fused: bool = False) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        if fused:  # packed gate|up: one bwd dx all-reduce (§Perf iter. 6)
+            return {"w_gu": dense_init(k1, d_model, 2 * d_ff, dtype),
+                    "w_down": dense_init(k3, d_ff, d_model, dtype)}
+        return {"w_gate": dense_init(k1, d_model, d_ff, dtype),
+                "w_up": dense_init(k2, d_model, d_ff, dtype),
+                "w_down": dense_init(k3, d_ff, d_model, dtype)}
+    return {"w_up": dense_init(k1, d_model, d_ff, dtype),
+            "w_down": dense_init(k2, d_ff, d_model, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# norms / mlp
+# ---------------------------------------------------------------------------
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # square in x.dtype, accumulate the mean in fp32: upcasting the whole
+    # tensor (x.astype(f32)) materializes an f32 [B,S,D] cotangent in the
+    # backward pass that the TP partial-sum all-reduce then moves at 2x the
+    # bytes (§Perf iteration 2) — the f32 accumulation keeps the precision
+    # that matters (the reduction) at bf16 wire cost.
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                   dtype=jnp.float32)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype)
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mean) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    return layernorm(p, x) if kind == "ln" else rmsnorm(p, x)
+
+
+def mlp(p: dict, x: jax.Array, act: str = "swiglu") -> jax.Array:
+    if act == "swiglu":
+        if "w_gu" in p:
+            gu = x @ p["w_gu"].astype(x.dtype)
+            g, u = jnp.split(gu, 2, axis=-1)
+            h = jax.nn.silu(g) * u
+        else:
+            h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+            h = h * (x @ p["w_up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) absolute token positions."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p: dict, x: jax.Array, kv_src: jax.Array,
+                 n_heads: int, n_kv_heads: int, head_dim: int):
+    q = x @ p["wq"].astype(x.dtype)
+    if "wkv" in p:
+        kvp = kv_src @ p["wkv"].astype(x.dtype)
+        if "bkv" in p:
+            kvp = kvp + p["bkv"].astype(x.dtype)
+        k, v = jnp.split(kvp, 2, axis=-1)
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+    else:
+        k = kv_src @ p["wk"].astype(x.dtype)
+        v = kv_src @ p["wv"].astype(x.dtype)
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+            k = k + p["bk"].astype(x.dtype)
+            v = v + p["bv"].astype(x.dtype)
+    B, S = x.shape[:2]
+    T = kv_src.shape[1]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, T, n_kv_heads, head_dim)
+    v = v.reshape(B, T, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def _seq_shard(x: jax.Array, axis: int) -> jax.Array:
+    """Constrain an attention intermediate to shard dim `axis` over the
+    `model` mesh axis (scores whose head count does not divide the mesh
+    would otherwise replicate the whole (B, H, S, T) tensor — §Perf
+    iterations B2/B3; axis=2 shards the query-seq dim (context parallel),
+    axis=1 pad-shards the head dim).  No-op outside a mesh."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        spec = [None] * x.ndim
+        spec[0] = "data"
+        spec[axis] = "model"
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def gqa_scores_apply(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: Optional[jax.Array],
+                     impl: str = "grouped",
+                     softmax_dtype=jnp.float32,
+                     seq_shard: bool = False) -> jax.Array:
+    """Grouped-query attention core.
+
+    q: (B, S, Hq, Dh), k/v: (B, T, Hkv, Dh), mask: broadcastable to
+    (B, Hkv, R, S, T) (grouped) / (B, Hq, S, T) (repeat), or plain (S, T).
+    Returns (B, S, Hq, Dh).
+
+    impl="grouped": 5-D (B, .., G, R, ..) einsums — KV heads never
+    materialized R-fold, but the G dim (often 8) does not divide a 16-way
+    `model` mesh axis, which forces SPMD involuntary replication of the
+    score tensors (§Perf iteration 1).
+    impl="repeat": broadcast KV to Hq heads first — Hq (32/40/96) divides
+    the mesh, so every attention intermediate shards over `model`; the
+    broadcast fuses into the matmul and never hits HBM.
+    """
+    B, S, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    scale = 1.0 / jnp.sqrt(Dh).astype(q.dtype)
+    if impl == "repeat":
+        rep = Hq // Hkv
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        scores = jnp.einsum("bshd,bthd->bhst", q * scale, k)
+        scores = scores.astype(softmax_dtype)
+        if seq_shard:
+            ax = 1 if seq_shard == "head" else 2
+            scores = _seq_shard(scores, ax)  # (B, H, S, T)
+        if mask is not None:
+            if mask.ndim == 5:  # (B, G, R, S, T) -> (B, H, S, T)
+                mask = mask.reshape(mask.shape[0], -1, *mask.shape[3:])
+            scores = jnp.where(mask, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        if seq_shard:
+            w = _seq_shard(w, 1 if seq_shard == "head" else 2)
+        return jnp.einsum("bhst,bthd->bshd", w, v)
+    R = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, R, Dh)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qg * scale, k)
+    scores = scores.astype(softmax_dtype)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrst,btgd->bsgrd", w, v)
+    return out.reshape(B, S, Hq, Dh)
+
+
+def causal_mask(S: int, T: int, window: Optional[int] = None,
+                offset: int = 0) -> jax.Array:
+    """(S, T) boolean mask; query i attends key j iff
+    j <= i + offset and (no window or i + offset - j < window)."""
+    i = jnp.arange(S)[:, None] + offset
+    j = jnp.arange(T)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (i - j < window)
+    return m
+
+
+def self_attention(p: dict, x: jax.Array, positions: jax.Array, *,
+                   n_heads: int, n_kv_heads: int, head_dim: int,
+                   theta: float, causal: bool = True,
+                   window: Optional[int] = None,
+                   use_rope: bool = True, return_kv: bool = False,
+                   impl: str = "grouped", softmax_dtype=jnp.float32,
+                   seq_shard: bool = False):
+    """Full-sequence self-attention (training / encoder / prefill).
+
+    With return_kv=True also returns the post-rope (k, v) — the prefill path
+    turns these into the decode cache."""
+    q, k, v = _project_qkv(p, x, x, n_heads, n_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    S = x.shape[1]
+    mask = causal_mask(S, S, window) if causal else None
+    out = gqa_scores_apply(q, k, v, mask, impl=impl,
+                           softmax_dtype=softmax_dtype, seq_shard=seq_shard)
+    out = out.reshape(x.shape[0], S, -1) @ p["wo"].astype(x.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def kv_to_cache(k: jax.Array, v: jax.Array, window: Optional[int] = None,
+                cache_len: Optional[int] = None) -> dict:
+    """Arrange full-sequence (B, S, G, Dh) K/V into the decode-cache layout.
+
+    Full attention: slot == position, zero-padded out to `cache_len` so
+    subsequent decode steps have room.  Sliding window: keep the last
+    `window` positions at slots pos %% window, matching the rolling writes
+    of `decode_self_attention`."""
+    S = k.shape[1]
+    if window is None:
+        target = cache_len or S
+        pad = target - S
+        if pad < 0:
+            raise ValueError(f"prompt {S} exceeds cache_len {target}")
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": k, "v": v}
+    target = min(window, cache_len) if cache_len else window
+    if S <= target:
+        pad = target - S
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": k, "v": v}
+    k_last = k[:, S - window:]
+    v_last = v[:, S - window:]
+    r = S % window
+    return {"k": jnp.roll(k_last, r, axis=1), "v": jnp.roll(v_last, r, axis=1)}
+
+
+def cross_attention(p: dict, x: jax.Array, memory: jax.Array, *,
+                    n_heads: int, n_kv_heads: int, head_dim: int,
+                    impl: str = "grouped") -> jax.Array:
+    """Cross-attention over a memory sequence (no mask, no rope)."""
+    q, k, v = _project_qkv(p, x, memory, n_heads, n_kv_heads, head_dim)
+    out = gqa_scores_apply(q, k, v, None, impl=impl)
+    return out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"].astype(x.dtype)
+
+
+def cross_attention_cached(p: dict, x: jax.Array, k: jax.Array,
+                           v: jax.Array, *, n_heads: int, n_kv_heads: int,
+                           head_dim: int, impl: str = "grouped") -> jax.Array:
+    """Cross-attention against precomputed K/V (decode path)."""
+    q = x @ p["wq"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, n_heads, head_dim)
+    out = gqa_scores_apply(q, k, v, None, impl=impl)
+    return out.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def project_cross_kv(p: dict, memory: jax.Array, *, n_kv_heads: int,
+                     head_dim: int) -> tuple[jax.Array, jax.Array]:
+    if "wkv" in p:
+        kvp = memory @ p["wkv"].astype(memory.dtype)
+        if "bkv" in p:
+            kvp = kvp + p["bkv"].astype(memory.dtype)
+        k, v = jnp.split(kvp, 2, axis=-1)
+    else:
+        k = memory @ p["wk"].astype(memory.dtype)
+        v = memory @ p["wv"].astype(memory.dtype)
+        if "bk" in p:
+            k = k + p["bk"].astype(memory.dtype)
+            v = v + p["bv"].astype(memory.dtype)
+    B, T = memory.shape[:2]
+    return (k.reshape(B, T, n_kv_heads, head_dim),
+            v.reshape(B, T, n_kv_heads, head_dim))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
+                  dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype=dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype=dtype),
+    }
+
+
+def decode_self_attention(p: dict, x: jax.Array, cache: dict,
+                          pos: jax.Array, *, n_heads: int, n_kv_heads: int,
+                          head_dim: int, theta: float,
+                          window: Optional[int] = None,
+                          use_rope: bool = True,
+                          impl: str = "grouped") -> tuple[jax.Array, dict]:
+    """One-token decode: x (B, 1, D); `pos` (scalar) is the absolute position
+    of the new token.  The cache holds the last `cache_len` K/V — for a
+    sliding-window model cache_len == window and writes wrap (rolling cache);
+    keys are stored post-rope at absolute positions so relative phases hold.
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, x, n_heads, n_kv_heads, head_dim)
+    if use_rope:
+        pos_b = jnp.full((B, 1), pos)
+        q = apply_rope(q, pos_b, theta)
+        k = apply_rope(k, pos_b, theta)
+    cache_len = cache["k"].shape[1]
+    # full cache: pos < cache_len so the modulo is a no-op; rolling window
+    # cache: writes wrap around.
+    slot = jnp.asarray(pos % cache_len, dtype=jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    # valid keys: slots filled so far (all slots once pos >= cache_len)
+    j = jnp.arange(cache_len)
+    if window is None:
+        valid = j <= pos
+    else:
+        valid = (j <= pos) | (pos >= cache_len)
+    mask = valid[None, None, None, None, :]
+    out = gqa_scores_apply(q, ck, cv, mask, impl=impl)
+    out = out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, {"k": ck, "v": cv}

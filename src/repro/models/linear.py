@@ -1,0 +1,15 @@
+"""The paper's workload: linear regression y = X beta + z (§II)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linreg_predict(beta: jax.Array, x: jax.Array) -> jax.Array:
+    return x @ beta
+
+
+def linreg_loss(beta: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Squared-error cost f(beta) = ||X beta - y||^2 (Eq. 1)."""
+    r = x @ beta - y
+    return jnp.sum(r * r)

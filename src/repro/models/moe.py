@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded grouped
+dispatch (GShard/Mesh-TF style).
+
+Tokens are processed in groups of `group_size`; within each group, each
+expert accepts at most `capacity` tokens (overflow is dropped — its residual
+passes through).  Dispatch/combine are one-hot einsums so the partitioner can
+shard the expert dimension over the `model` mesh axis and derive the
+all-to-all; no gather/scatter, no host-side control flow.
+
+Shapes: x (B, S, D) -> flattened (n_groups, group, D);
+dispatch/combine (n_groups, group, E, C); expert buffers (n_groups, E, C, D).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    group_size: int = 2048
+    capacity_factor: float = 2.0
+
+    def capacity(self, group: int) -> int:
+        cap = int(self.capacity_factor * self.top_k * group / self.n_experts)
+        return max(cap, self.top_k)
+
+
+def init_moe(key, dims: MoEDims, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, d, f = dims.n_experts, dims.d_model, dims.d_ff
+    scale_in = 1.0 / jnp.sqrt(d)
+    scale_out = 1.0 / jnp.sqrt(f)
+    return {
+        "router": dense_init(k1, d, e, jnp.float32),  # router math stays fp32
+        "w_gate": (jax.random.normal(k2, (e, d, f)) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(k3, (e, d, f)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k4, (e, f, d)) * scale_out).astype(dtype),
+    }
+
+
+def _top_k_mask(router_probs: jax.Array, k: int):
+    """Per-token top-k expert selection.
+
+    router_probs: (..., E).  Returns (mask (..., E) in {0,1},
+    gates (..., E) with renormalized probs on the selected experts)."""
+    top_vals, _ = jax.lax.top_k(router_probs, k)
+    thresh = top_vals[..., -1:]
+    mask = (router_probs >= thresh).astype(router_probs.dtype)
+    gates = router_probs * mask
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return mask, gates
+
+
+def moe_ffn(p: dict, x: jax.Array, dims: MoEDims):
+    """Apply the MoE FFN. x: (B, S, D). Returns (y, aux) where aux carries the
+    load-balancing loss terms (Switch/GShard auxiliary loss)."""
+    B, S, D = x.shape
+    T = B * S
+    group = min(dims.group_size, T)
+    if T % group != 0:  # shrink until it divides (T is a power-of-2 product)
+        while T % group != 0:
+            group //= 2
+    n_groups = T // group
+    e = dims.n_experts
+    cap = dims.capacity(group)
+
+    xg = x.reshape(n_groups, group, D)
+    logits = (xg.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))          # (n, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    mask, gates = _top_k_mask(probs, dims.top_k)          # (n, g, E)
+
+    # position of each token within its expert's queue (top-1 slot priority;
+    # for top-k the k-th choices queue behind all (k-1)-th choices)
+    # cumulative count per expert along the group axis
+    pos_in_expert = jnp.cumsum(mask, axis=1) - mask       # (n, g, E)
+    keep = mask * (pos_in_expert < cap)                   # drop overflow
+    slot_onehot = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), cap,
+                                 dtype=jnp.float32)        # (n, g, E, C)
+    dispatch = keep[..., None] * slot_onehot               # (n, g, E, C)
+    combine = (gates * keep)[..., None] * slot_onehot      # (n, g, E, C)
+
+    xd = x.dtype
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch.astype(xd), xg)
+
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", expert_in,
+                               p["w_gate"].astype(xd)))
+    h = h * jnp.einsum("necd,edf->necf", expert_in, p["w_up"].astype(xd))
+    expert_out = jnp.einsum("necf,efd->necd", h, p["w_down"].astype(xd))
+
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(xd), expert_out)
+    y = y.reshape(B, S, D)
+
+    # auxiliary load-balance loss (Switch): E * sum_e f_e * P_e
+    frac_tokens = jnp.mean(mask, axis=1)                   # (n, E)
+    frac_probs = jnp.mean(probs, axis=1)                   # (n, E)
+    aux_loss = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    # router z-loss (stabilizes logits)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y, {"aux_loss": aux_loss, "z_loss": z_loss,
+               "dropped_frac": 1.0 - jnp.mean(jnp.sum(keep, -1)
+                                              / dims.top_k)}

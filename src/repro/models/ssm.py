@@ -1,0 +1,308 @@
+"""Mamba2 blocks via the State Space Duality (SSD) algorithm
+[arXiv:2405.21060].
+
+The selective state-space recurrence
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t,      y_t = C_t^T h_t
+
+is evaluated with the chunked matmul-friendly SSD decomposition: split the
+sequence into chunks of Q tokens; within a chunk the output is a masked
+(C B^T)-weighted quadratic form; across chunks a tiny recurrence carries the
+(H, P, N) state.  Everything maps onto MXU matmuls except the O(S/Q) carry
+scan.  A per head is a scalar (Mamba2's "scalar-identity" A).
+
+Shapes: x (B, S, H, P) with H heads of headdim P; B/C (B, S, G, N) with G
+state groups (G divides H) and state size N; dt (B, S, H).
+
+`ssd_chunked` is the pure-jnp oracle; `repro.kernels.ssd` provides the Pallas
+kernel for the intra-chunk part.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+DEFAULT_CHUNK = 256
+
+
+def segsum(a: jax.Array) -> jax.Array:
+    """Stable "segment sum": out[..., i, j] = sum_{k=j+1..i} a[..., k]
+    for j < i, 0 on the diagonal, -inf above it. a: (..., Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # i, j -> cs_i - cs_j
+    i = jnp.arange(q)[:, None]
+    j = jnp.arange(q)[None, :]
+    return jnp.where(j <= i, diff, -jnp.inf)
+
+
+def _shard_heads(x: jax.Array, h_axis: int) -> jax.Array:
+    """Constrain the SSD head dim onto the `model` mesh axis: without this
+    the whole SSD computation replicates across model shards (its only
+    sharded input dim is batch) — §Perf iteration C3.  No-op off-mesh."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        spec = [None] * x.ndim
+        spec[0] = "data"
+        spec[h_axis] = "model"
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int = DEFAULT_CHUNK,
+                h0: Optional[jax.Array] = None,
+                use_kernel: bool = False, head_shard: bool = False):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P), dt: (B, S, H), a: (H,) negative decay rates,
+    b, c: (B, S, G, N) with H % G == 0.
+    Returns (y (B, S, H, P), h_final (B, H, P, N)).
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    orig_s = S
+    if S % chunk != 0:
+        # zero-pad the tail: dt=0 gives decay exp(0)=1 and zero input, so
+        # padded steps leave the state untouched and emit garbage-free zeros.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    rep = H // G
+
+    # broadcast state groups to heads
+    bh = jnp.repeat(b, rep, axis=2)                      # (B, S, H, N)
+    ch = jnp.repeat(c, rep, axis=2)
+    if head_shard:
+        x = _shard_heads(x, 2)
+        dt = _shard_heads(dt, 2)
+        bh = _shard_heads(bh, 2)
+        ch = _shard_heads(ch, 2)
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    bc = bh.reshape(B, nc, chunk, H, N)
+    cc = ch.reshape(B, nc, chunk, H, N)
+
+    da = dtc * a[None, None, None, :]                    # (B, nc, Q, H) decay log
+    da = da.astype(jnp.float32)
+
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_ops
+        y_diag, states = ssd_ops.ssd_chunk(xc, dtc, da, bc, cc)
+    else:
+        y_diag, states = ssd_chunk_reference(xc, dtc, da, bc, cc)
+
+    # ---- inter-chunk recurrence over the carried states -------------------
+    # decay of a full chunk per head: exp(sum_t da_t)
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))           # (B, nc, H)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), dtype=jnp.float32)
+
+    def step(h, inp):
+        dec, s = inp                                     # dec (B,H), s (B,H,P,N)
+        h_new = h * dec[..., None, None] + s
+        return h_new, h
+
+    (h_final, h_prev) = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                  # (B, nc, H, P, N)
+
+    # ---- contribution of the carried-in state to each chunk ---------------
+    # decay from chunk start to position t: exp(cumsum inclusive of da)
+    decay_in = jnp.exp(jnp.cumsum(da, axis=2))           # (B, nc, Q, H)
+    y_off = jnp.einsum("bnqhs,bnhps,bnqh->bnqhp",
+                       cc.astype(jnp.float32), h_prev, decay_in)
+
+    y = (y_diag + y_off).astype(x.dtype).reshape(B, S, H, P)
+    return y[:, :orig_s], h_final
+
+
+def ssd_chunk_reference(xc, dtc, da, bc, cc):
+    """Intra-chunk quadratic part + per-chunk carried state (jnp oracle).
+
+    xc (B,nc,Q,H,P), dtc (B,nc,Q,H), da (B,nc,Q,H) fp32, bc/cc (B,nc,Q,H,N).
+    Returns y_diag (B,nc,Q,H,P) fp32, states (B,nc,H,P,N) fp32.
+    """
+    f32 = jnp.float32
+    xw = (xc * dtc[..., None]).astype(f32)               # dt-weighted inputs
+    # attention-like intra-chunk matrix: L[t, s] = exp(sum_{s<k<=t} da_k)
+    lmat = jnp.exp(segsum(jnp.moveaxis(da, 2, -1)))      # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bnqhs,bnths->bnhqt",
+                        cc.astype(f32), bc.astype(f32))  # (B,nc,H,Q,T)
+    y_diag = jnp.einsum("bnhqt,bnhqt,bnthp->bnqhp",
+                        scores, lmat, xw)
+    # carried state: decay from each position to chunk end (exclusive of t? —
+    # inclusive of everything after t): exp(sum_{k>t} da_k)
+    cum = jnp.cumsum(da, axis=2)
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,Q,H)
+    states = jnp.einsum("bnqhs,bnqh,bnqhp->bnhps",
+                        bc.astype(f32), decay_out, xw)
+    return y_diag, states
+
+
+def ssd_decode_step(h: jax.Array, x: jax.Array, dt: jax.Array, a: jax.Array,
+                    b: jax.Array, c: jax.Array):
+    """Single-token recurrence. h (B,H,P,N), x (B,H,P), dt (B,H),
+    b,c (B,G,N). Returns (y (B,H,P), h_new)."""
+    H = x.shape[1]
+    rep = H // b.shape[1]
+    bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    ch = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    da = (dt * a[None, :]).astype(jnp.float32)
+    dec = jnp.exp(da)[..., None, None]                   # (B,H,1,1)
+    xw = (x * dt[..., None]).astype(jnp.float32)
+    h_new = h * dec + jnp.einsum("bhp,bhs->bhps", xw, bh)
+    y = jnp.einsum("bhps,bhs->bhp", h_new, ch)
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block (projections + causal conv + SSD + gate)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, d_model: int, d_state: int, n_heads: int, headdim: int,
+                n_groups: int, d_conv: int, dtype) -> dict:
+    d_inner = n_heads * headdim
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return {
+        # order: [z (gate), x, B, C, dt]
+        "w_in": dense_init(k1, d_model,
+                           2 * d_inner + 2 * n_groups * d_state + n_heads,
+                           dtype),
+        "conv_w": (jax.random.normal(k2, (d_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype=dtype),
+        "d_skip": jnp.ones((n_heads,), dtype=dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype=dtype),
+        "w_out": dense_init(k5, d_inner, d_model, dtype),
+    }
+
+
+def _split_in(proj, d_inner, n_groups, d_state, n_heads):
+    zs = d_inner
+    xs = d_inner
+    bs = n_groups * d_state
+    cs = n_groups * d_state
+    z, xr, b, c, dt = jnp.split(
+        proj, [zs, zs + xs, zs + xs + bs, zs + xs + bs + cs], axis=-1)
+    return z, xr, b, c, dt
+
+
+def causal_conv(w: jax.Array, bias: jax.Array, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # windowed sum: sum_j w[j] * x[t - (k-1) + j]
+    out = jnp.zeros_like(x)
+    for j in range(k):  # k is tiny (4); unrolled adds fuse fine
+        out = out + pad[:, j:j + x.shape[1], :] * w[j][None, None, :]
+    return out + bias[None, None, :]
+
+
+def mamba2_block(p: dict, x: jax.Array, *, d_state: int, n_heads: int,
+                 headdim: int, n_groups: int, chunk: int = DEFAULT_CHUNK,
+                 use_kernel: bool = False,
+                 head_shard: bool = False) -> jax.Array:
+    """Full-sequence Mamba2 mixer. x: (B, S, D) -> (B, S, D)."""
+    y, _ = mamba2_prefill(p, x, d_state=d_state, n_heads=n_heads,
+                          headdim=headdim, n_groups=n_groups, chunk=chunk,
+                          use_kernel=use_kernel, head_shard=head_shard)
+    return y
+
+
+def mamba2_prefill(p: dict, x: jax.Array, *, d_state: int, n_heads: int,
+                   headdim: int, n_groups: int, chunk: int = DEFAULT_CHUNK,
+                   use_kernel: bool = False,
+                   head_shard: bool = False) -> tuple[jax.Array, dict]:
+    """Full-sequence Mamba2 that also returns the decode cache (final SSM
+    state + last d_conv-1 conv inputs)."""
+    B, S, _ = x.shape
+    d_inner = n_heads * headdim
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xr, b, c, dt = _split_in(proj, d_inner, n_groups, d_state, n_heads)
+    conv_in = jnp.concatenate([xr, b, c], axis=-1)
+    d_conv = p["conv_w"].shape[0]
+    conv_hist = conv_in[:, S - (d_conv - 1):, :]          # decode conv cache
+    conv_out = jax.nn.silu(causal_conv(p["conv_w"].astype(x.dtype),
+                                       p["conv_b"].astype(x.dtype), conv_in))
+    xr, b, c = jnp.split(conv_out,
+                         [d_inner, d_inner + n_groups * d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xr.reshape(B, S, n_heads, headdim)
+    bg = b.reshape(B, S, n_groups, d_state)
+    cg = c.reshape(B, S, n_groups, d_state)
+    y, h_final = ssd_chunked(xh, dt, a, bg, cg, chunk=chunk,
+                             use_kernel=use_kernel, head_shard=head_shard)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    if head_shard:
+        # keep the gated norm and out-projection channel-sharded: the mean
+        # reduces cross-shard as a (B,S,1) all-reduce and the w_out matmul
+        # partial-sums into one (B,S,D) all-reduce instead of gathering the
+        # full (B,S,d_inner) y (§Perf iteration C4)
+        y = _shard_heads(y, 2)
+        z = _shard_heads(z, 2)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True,
+                   dtype=jnp.float32)
+    y = (y * jax.lax.rsqrt(var + 1e-6).astype(x.dtype)
+         * p["norm_scale"].astype(x.dtype))
+    out = y @ p["w_out"].astype(x.dtype)
+    return out, {"conv": conv_hist, "ssm": h_final}
+
+
+def init_mamba2_cache(batch: int, d_state: int, n_heads: int, headdim: int,
+                      n_groups: int, d_conv: int, dtype) -> dict:
+    conv_dim = n_heads * headdim + 2 * n_groups * d_state
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, conv_dim), dtype=dtype),
+        "ssm": jnp.zeros((batch, n_heads, headdim, d_state),
+                         dtype=jnp.float32),
+    }
+
+
+def mamba2_decode(p: dict, x: jax.Array, cache: dict, *, d_state: int,
+                  n_heads: int, headdim: int,
+                  n_groups: int) -> tuple[jax.Array, dict]:
+    """Single-token Mamba2 step. x: (B, 1, D)."""
+    B = x.shape[0]
+    d_inner = n_heads * headdim
+    proj = x[:, 0] @ p["w_in"].astype(x.dtype)            # (B, ...)
+    z, xr, b, c, dt = _split_in(proj, d_inner, n_groups, d_state, n_heads)
+    conv_in = jnp.concatenate([xr, b, c], axis=-1)        # (B, C)
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None, :]], axis=1)
+    w = p["conv_w"].astype(x.dtype)                       # (K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(x.dtype)
+    conv_out = jax.nn.silu(conv_out)
+    xr, b, c = jnp.split(conv_out,
+                         [d_inner, d_inner + n_groups * d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xr.reshape(B, n_heads, headdim)
+    bg = b.reshape(B, n_groups, d_state)
+    cg = c.reshape(B, n_groups, d_state)
+    y, h_new = ssd_decode_step(cache["ssm"], xh, dt, a, bg, cg)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, d_inner)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6).astype(x.dtype)
+         * p["norm_scale"].astype(x.dtype))
+    out = (y @ p["w_out"].astype(x.dtype))[:, None, :]
+    return out, {"conv": hist[:, 1:, :], "ssm": h_new}

@@ -1,0 +1,875 @@
+"""Unified decoder-LM covering all six assigned architecture families.
+
+One parameter tree + three entry points per config:
+
+  * ``forward_train(cfg, params, batch)``  -> logits over the full sequence
+  * ``prefill(cfg, params, batch)``        -> (last-token logits, cache)
+  * ``decode_step(cfg, params, batch, cache)`` -> (logits, new cache)
+
+Layer stacks are scanned (stacked params, ``jax.lax.scan``) so HLO size and
+compile time are independent of depth — essential for the 88-layer /
+48-layer production configs in the multi-pod dry-run.
+
+Family wiring:
+  dense   — uniform [attn + MLP] blocks
+  moe     — [attn + (MoE every k-th | dense MLP)] blocks; k = cfg.moe.every
+  ssm     — uniform Mamba2 blocks (attention-free)
+  hybrid  — Mamba2 backbone; ONE weight-shared [attn + MLP] block applied
+            every cfg.hybrid.attn_every layers (Zamba2)
+  vlm     — groups of (cross_every-1) self blocks + 1 cross-attn block over
+            vision patch embeddings (Llama-3.2-Vision); vision tower stubbed
+  audio   — encoder (non-causal self blocks over stub frame embeddings) +
+            decoder with self + cross blocks (Whisper)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, n: int, init_fn):
+    """Initialize n copies of a block and stack leaves -> [n, ...] arrays."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _norm_init(cfg: ArchConfig, d: int, dtype) -> dict:
+    return L.init_ln(d, dtype) if cfg.norm == "ln" else L.init_norm(d, dtype)
+
+
+def _init_self_block(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "attn_norm": _norm_init(cfg, d, dtype),
+        "attn": L.init_attention(k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                 dtype, bias=cfg.attn_bias,
+                                 fused=cfg.fused_proj),
+        "mlp_norm": _norm_init(cfg, d, dtype),
+        "mlp": L.init_mlp(k2, d, cfg.d_ff, dtype, act=cfg.act,
+                          fused=cfg.fused_proj),
+    }
+
+
+def _init_moe_block(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    dims = M.MoEDims(cfg.moe.n_experts, cfg.moe.top_k, d, cfg.d_ff,
+                     cfg.moe.group_size, cfg.moe.capacity_factor)
+    return {
+        "attn_norm": _norm_init(cfg, d, dtype),
+        "attn": L.init_attention(k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                 dtype, bias=cfg.attn_bias,
+                                 fused=cfg.fused_proj),
+        "mlp_norm": _norm_init(cfg, d, dtype),
+        "moe": M.init_moe(k2, dims, dtype),
+    }
+
+
+def _init_mamba_block(key, cfg: ArchConfig, dtype) -> dict:
+    s = cfg.ssm
+    return {
+        "norm": L.init_norm(cfg.d_model, dtype),
+        "mixer": S.init_mamba2(key, cfg.d_model, s.d_state,
+                               s.n_heads(cfg.d_model), s.headdim,
+                               s.n_groups, s.d_conv, dtype),
+    }
+
+
+def _init_cross_block(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    kv_in = cfg.vlm.d_vision if cfg.vlm else d
+    return {
+        "attn_norm": _norm_init(cfg, d, dtype),
+        "attn": L.init_attention(k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                 dtype, kv_input_dim=kv_in),
+        "mlp_norm": _norm_init(cfg, d, dtype),
+        "mlp": L.init_mlp(k2, d, cfg.d_ff, dtype, act=cfg.act),
+        "gate": jnp.zeros((1,), dtype=dtype),  # zero-init gated cross-attn
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array,
+                dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, d)) * 0.02).astype(dtype),
+        "final_norm": (L.init_ln(d, dtype) if cfg.norm == "ln"
+                       else L.init_norm(d, dtype)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[1], d, cfg.vocab, dtype)
+
+    at = cfg.arch_type
+    if at == "dense":
+        p["blocks"] = _stack_init(ks[2], cfg.n_layers,
+                                  lambda k: _init_self_block(k, cfg, dtype))
+    elif at == "moe":
+        every = cfg.moe.every
+        n_moe = cfg.n_layers // every
+        n_dense = cfg.n_layers - n_moe
+        p["moe_blocks"] = _stack_init(ks[2], n_moe,
+                                      lambda k: _init_moe_block(k, cfg, dtype))
+        if n_dense:
+            p["blocks"] = _stack_init(
+                ks[3], n_dense, lambda k: _init_self_block(k, cfg, dtype))
+    elif at == "ssm":
+        p["blocks"] = _stack_init(ks[2], cfg.n_layers,
+                                  lambda k: _init_mamba_block(k, cfg, dtype))
+    elif at == "hybrid":
+        p["blocks"] = _stack_init(ks[2], cfg.n_layers,
+                                  lambda k: _init_mamba_block(k, cfg, dtype))
+        p["shared_attn"] = _init_self_block(ks[3], cfg, dtype)
+    elif at == "vlm":
+        n_groups, n_self = _vlm_layout(cfg)
+        p["blocks"] = _stack_init(
+            ks[2], n_groups * n_self, lambda k: _init_self_block(k, cfg, dtype))
+        p["cross_blocks"] = _stack_init(
+            ks[3], n_groups, lambda k: _init_cross_block(k, cfg, dtype))
+    elif at == "audio":
+        p["enc_blocks"] = _stack_init(
+            ks[2], cfg.encdec.n_enc_layers,
+            lambda k: _init_self_block(k, cfg, dtype))
+        p["enc_norm"] = (L.init_ln(d, dtype) if cfg.norm == "ln"
+                         else L.init_norm(d, dtype))
+        p["blocks"] = _stack_init(ks[3], cfg.n_layers,
+                                  lambda k: _init_self_block(k, cfg, dtype))
+        p["cross_blocks"] = _stack_init(
+            ks[4], cfg.n_layers, lambda k: _init_cross_block(k, cfg, dtype))
+    else:
+        raise ValueError(f"unknown arch_type {at}")
+    return p
+
+
+def _softmax_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.softmax_dtype == "bf16" else jnp.float32
+
+
+def _vlm_layout(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_groups, self_layers_per_group): groups of (cross_every - 1) self
+    layers followed by one cross layer, covering n_layers total."""
+    ce = cfg.vlm.cross_every
+    n_groups = cfg.n_layers // ce
+    return n_groups, ce - 1
+
+
+# ---------------------------------------------------------------------------
+# block applications (full sequence)
+# ---------------------------------------------------------------------------
+
+def _self_block(cfg: ArchConfig, bp: dict, x, positions, causal=True):
+    h = L.apply_norm(bp["attn_norm"], x, cfg.norm)
+    attn = L.self_attention(
+        bp["attn"], h, positions, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
+        causal=causal, window=cfg.sliding_window if causal else None,
+        impl=cfg.attn_impl, softmax_dtype=_softmax_dtype(cfg),
+        seq_shard=cfg.attn_seq_shard)
+    # name the post-all-reduce activations so the save_ar remat policy can
+    # keep them: the TP partial-sum all-reduce is then not re-run during
+    # the backward recompute (§Perf iteration 5)
+    x = x + checkpoint_name(attn, "post_ar")
+    h = L.apply_norm(bp["mlp_norm"], x, cfg.norm)
+    return x + checkpoint_name(L.mlp(bp["mlp"], h, act=cfg.act), "post_ar")
+
+
+def _moe_block(cfg: ArchConfig, bp: dict, x, positions):
+    dims = M.MoEDims(cfg.moe.n_experts, cfg.moe.top_k, cfg.d_model, cfg.d_ff,
+                     cfg.moe.group_size, cfg.moe.capacity_factor)
+    h = L.apply_norm(bp["attn_norm"], x, cfg.norm)
+    x = x + L.self_attention(
+        bp["attn"], h, positions, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
+        causal=True, window=cfg.sliding_window, impl=cfg.attn_impl,
+        softmax_dtype=_softmax_dtype(cfg), seq_shard=cfg.attn_seq_shard)
+    h = L.apply_norm(bp["mlp_norm"], x, cfg.norm)
+    y, aux = M.moe_ffn(bp["moe"], h, dims)
+    return x + y, aux
+
+
+def _mamba_block(cfg: ArchConfig, bp: dict, x, use_kernel=False):
+    s = cfg.ssm
+    h = L.rmsnorm(bp["norm"], x)
+    return x + S.mamba2_block(
+        bp["mixer"], h, d_state=s.d_state, n_heads=s.n_heads(cfg.d_model),
+        headdim=s.headdim, n_groups=s.n_groups, chunk=s.chunk,
+        use_kernel=use_kernel, head_shard=s.head_shard)
+
+
+def _cross_block(cfg: ArchConfig, bp: dict, x, memory):
+    h = L.apply_norm(bp["attn_norm"], x, cfg.norm)
+    attn = L.cross_attention(bp["attn"], h, memory, n_heads=cfg.n_heads,
+                             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                             impl=cfg.attn_impl)
+    gate = jnp.tanh(bp["gate"].astype(x.dtype)) if "gate" in bp else 1.0
+    x = x + gate * attn
+    h = L.apply_norm(bp["mlp_norm"], x, cfg.norm)
+    return x + L.mlp(bp["mlp"], h, act=cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / encoder)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ArchConfig, params: dict, tokens: jax.Array,
+           compute_dtype) -> jax.Array:
+    return params["embed"].astype(compute_dtype)[tokens]
+
+
+def _unembed(cfg: ArchConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return (x @ head.astype(x.dtype)).astype(jnp.float32)
+
+
+def _remat(fn, remat):
+    """remat: False | True ("full") | "save_ar"."""
+    if not remat:
+        return fn
+    if remat == "save_ar":
+        policy = jax.checkpoint_policies.save_only_these_names("post_ar")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan_blocks(block_fn, stacked: dict, x, *, remat=False):
+    fn = _remat(block_fn, remat)
+
+    def step(carry, bp):
+        return fn(carry, bp), None
+
+    out, _ = jax.lax.scan(step, x, stacked)
+    return out
+
+
+def _run_backbone(cfg: ArchConfig, params: dict, x: jax.Array,
+                  positions: jax.Array, batch: dict, *,
+                  remat: bool = False, use_kernel: bool = False,
+                  causal: bool = True):
+    """Apply the full layer stack for any family. Returns (x, aux)."""
+    at = cfg.arch_type
+    aux: dict[str, jax.Array] = {}
+
+    if at == "dense":
+        x = _scan_blocks(
+            lambda h, bp: _self_block(cfg, bp, h, positions, causal),
+            params["blocks"], x, remat=remat)
+
+    elif at == "moe":
+        every = cfg.moe.every
+
+        def moe_step(h, bp):
+            h2, a = _moe_block(cfg, bp, h, positions)
+            return h2, a["aux_loss"]
+
+        if every == 1:
+            fn = _remat(moe_step, remat)
+            x, auxl = jax.lax.scan(lambda c, bp: fn(c, bp),
+                                   x, params["moe_blocks"])
+            aux["moe_aux_loss"] = jnp.mean(auxl)
+        else:
+            # interleave: (every-1) dense blocks then 1 MoE block, repeated
+            n_moe = cfg.n_layers // every
+            n_dense_per = every - 1
+            dense = jax.tree.map(
+                lambda a: a.reshape((n_moe, n_dense_per) + a.shape[1:]),
+                params["blocks"])
+            both = {"dense": dense, "moe": params["moe_blocks"]}
+
+            def group(h, bp):
+                h = _scan_blocks(
+                    lambda hh, dd: _self_block(cfg, dd, hh, positions),
+                    bp["dense"], h, remat=remat)
+                if remat:
+                    h, a = _remat(lambda hh: moe_step(hh, bp["moe"]),
+                                  remat)(h)
+                else:
+                    h, a = moe_step(h, bp["moe"])
+                return h, a
+
+            x, auxl = jax.lax.scan(group, x, both)
+            aux["moe_aux_loss"] = jnp.mean(auxl)
+
+    elif at == "ssm":
+        x = _scan_blocks(
+            lambda h, bp: _mamba_block(cfg, bp, h, use_kernel=use_kernel),
+            params["blocks"], x, remat=remat)
+
+    elif at == "hybrid":
+        ae = cfg.hybrid.attn_every
+        shared = params["shared_attn"]
+
+        def block(h, bp_i):
+            bp, i = bp_i
+            h = _mamba_block(cfg, bp, h, use_kernel=use_kernel)
+            h = jax.lax.cond(
+                (i + 1) % ae == 0,
+                lambda hh: _self_block(cfg, shared, hh, positions),
+                lambda hh: hh, h)
+            return h
+
+        idx = jnp.arange(cfg.n_layers)
+        fn = _remat(block, remat)
+        x, _ = jax.lax.scan(lambda c, bp: (fn(c, bp), None), x,
+                            (params["blocks"], idx))
+
+    elif at == "vlm":
+        n_groups, n_self = _vlm_layout(cfg)
+        memory = batch["patches"].astype(x.dtype)
+        selfs = jax.tree.map(
+            lambda a: a.reshape((n_groups, n_self) + a.shape[1:]),
+            params["blocks"])
+        both = {"self": selfs, "cross": params["cross_blocks"]}
+
+        def group(h, bp):
+            h = _scan_blocks(
+                lambda hh, dd: _self_block(cfg, dd, hh, positions),
+                bp["self"], h, remat=remat)
+            cb = _remat(lambda hh: _cross_block(cfg, bp["cross"], hh,
+                                                memory), remat)
+            return cb(h), None
+
+        x, _ = jax.lax.scan(group, x, both)
+
+    elif at == "audio":
+        # encode stub frames, then decode with interleaved self+cross
+        frames = batch["frames"].astype(x.dtype)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(frames.shape[1])[None, :], frames.shape[:2])
+        enc = _scan_blocks(
+            lambda h, bp: _self_block(cfg, bp, h, enc_pos, causal=False),
+            params["enc_blocks"], frames, remat=remat)
+        enc = L.apply_norm(params["enc_norm"], enc, cfg.norm)
+        both = {"self": params["blocks"], "cross": params["cross_blocks"]}
+
+        def block(h, bp):
+            h = _self_block(cfg, bp["self"], h, positions)
+            h = _cross_block(cfg, bp["cross"], h, enc)
+            return h, None
+
+        fn = _remat(lambda h, bp: block(h, bp)[0], remat) if remat else None
+        if remat:
+            x, _ = jax.lax.scan(lambda c, bp: (fn(c, bp), None), x, both)
+        else:
+            x, _ = jax.lax.scan(block, x, both)
+
+    else:
+        raise ValueError(at)
+    return x, aux
+
+
+def forward_train(cfg: ArchConfig, params: dict, batch: dict, *,
+                  compute_dtype=jnp.float32, remat: bool = False,
+                  use_kernel: bool = False):
+    """Full-sequence forward. Returns (logits fp32 (B, S, V), aux)."""
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    x = _embed(cfg, params, tokens, compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], (B, Sq))
+    x, aux = _run_backbone(cfg, params, x, positions, batch,
+                           remat=remat, use_kernel=use_kernel)
+    return _unembed(cfg, params, x), aux
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *,
+            compute_dtype=jnp.float32, remat: bool = False,
+            use_kernel: bool = False):
+    """Next-token cross-entropy (+ MoE aux losses)."""
+    logits, aux = forward_train(cfg, params, batch,
+                                compute_dtype=compute_dtype, remat=remat,
+                                use_kernel=use_kernel)
+    targets = batch["targets"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    if "moe_aux_loss" in aux:
+        loss = loss + 0.01 * aux["moe_aux_loss"]
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init, prefill, single-token decode
+# ---------------------------------------------------------------------------
+
+def _attn_cache_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Rolling-window caches only keep `window` slots (sub-quadratic decode)."""
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, seq_len: int,
+               dtype=jnp.float32, batch: Optional[dict] = None) -> dict:
+    """Zero-initialized decode cache for `seq_len` positions.
+
+    For VLM/audio archs the cross-attention K/V are part of the cache and are
+    filled by `prefill` (pass `batch` with patches/frames to precompute them
+    here when skipping prefill)."""
+    at = cfg.arch_type
+    clen = _attn_cache_len(cfg, seq_len)
+    B = batch_size
+
+    def kv(n, t=clen):
+        return {
+            "k": jnp.zeros((n, B, t, cfg.n_kv_heads, cfg.hd), dtype=dtype),
+            "v": jnp.zeros((n, B, t, cfg.n_kv_heads, cfg.hd), dtype=dtype),
+        }
+
+    if at in ("dense", "moe"):
+        return {"attn": kv(cfg.n_layers)}
+    if at == "ssm":
+        return {"mamba": _mamba_cache_stack(cfg, cfg.n_layers, B, dtype)}
+    if at == "hybrid":
+        n_attn = cfg.n_layers // cfg.hybrid.attn_every
+        return {"mamba": _mamba_cache_stack(cfg, cfg.n_layers, B, dtype),
+                "attn": kv(n_attn)}
+    if at == "vlm":
+        n_groups, n_self = _vlm_layout(cfg)
+        cache = {"attn": kv(n_groups * n_self)}
+        P = cfg.vlm.n_patches
+        cache["cross"] = {
+            "k": jnp.zeros((n_groups, B, P, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((n_groups, B, P, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+        if batch is not None:
+            cache["cross"] = _vlm_cross_kv(cfg, None, batch)  # filled later
+        return cache
+    if at == "audio":
+        F = cfg.encdec.n_frames
+        return {"attn": kv(cfg.n_layers),
+                "cross": {
+                    "k": jnp.zeros((cfg.n_layers, B, F, cfg.n_kv_heads,
+                                    cfg.hd), dtype),
+                    "v": jnp.zeros((cfg.n_layers, B, F, cfg.n_kv_heads,
+                                    cfg.hd), dtype),
+                }}
+    raise ValueError(at)
+
+
+def _mamba_cache_stack(cfg: ArchConfig, n: int, B: int, dtype) -> dict:
+    s = cfg.ssm
+    H = s.n_heads(cfg.d_model)
+    conv_dim = H * s.headdim + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((n, B, s.d_conv - 1, conv_dim), dtype=dtype),
+        "ssm": jnp.zeros((n, B, H, s.headdim, s.d_state), dtype=jnp.float32),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch_size: int, seq_len: int,
+                dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree of the decode cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch_size, seq_len, dtype=dtype))
+
+
+def _vlm_cross_kv(cfg: ArchConfig, params: dict, batch: dict) -> dict:
+    memory = batch["patches"]
+
+    def one(cb):
+        return L.project_cross_kv(cb["attn"], memory,
+                                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd)
+
+    ks, vs = jax.vmap(one)(params["cross_blocks"])
+    return {"k": ks, "v": vs}
+
+
+# -- decode blocks ----------------------------------------------------------
+
+def _self_block_decode(cfg: ArchConfig, bp: dict, x, cache_l: dict, pos):
+    h = L.apply_norm(bp["attn_norm"], x, cfg.norm)
+    attn, new_cache = L.decode_self_attention(
+        bp["attn"], h, cache_l, pos, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
+        window=cfg.sliding_window, impl=cfg.attn_impl)
+    x = x + attn
+    h = L.apply_norm(bp["mlp_norm"], x, cfg.norm)
+    return x + L.mlp(bp["mlp"], h, act=cfg.act), new_cache
+
+
+def _moe_block_decode(cfg: ArchConfig, bp: dict, x, cache_l: dict, pos):
+    dims = M.MoEDims(cfg.moe.n_experts, cfg.moe.top_k, cfg.d_model, cfg.d_ff,
+                     cfg.moe.group_size, cfg.moe.capacity_factor)
+    h = L.apply_norm(bp["attn_norm"], x, cfg.norm)
+    attn, new_cache = L.decode_self_attention(
+        bp["attn"], h, cache_l, pos, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
+        window=cfg.sliding_window, impl=cfg.attn_impl)
+    x = x + attn
+    h = L.apply_norm(bp["mlp_norm"], x, cfg.norm)
+    y, _ = M.moe_ffn(bp["moe"], h, dims)
+    return x + y, new_cache
+
+
+def _cross_block_decode(cfg: ArchConfig, bp: dict, x, ck, cv):
+    h = L.apply_norm(bp["attn_norm"], x, cfg.norm)
+    attn = L.cross_attention_cached(bp["attn"], h, ck, cv,
+                                    n_heads=cfg.n_heads,
+                                    n_kv_heads=cfg.n_kv_heads,
+                                    head_dim=cfg.hd, impl=cfg.attn_impl)
+    gate = jnp.tanh(bp["gate"].astype(x.dtype)) if "gate" in bp else 1.0
+    x = x + gate * attn
+    h = L.apply_norm(bp["mlp_norm"], x, cfg.norm)
+    return x + L.mlp(bp["mlp"], h, act=cfg.act)
+
+
+def decode_step(cfg: ArchConfig, params: dict, batch: dict, cache: dict, *,
+                compute_dtype=jnp.bfloat16):
+    """One new token against the cache.
+
+    batch: {"token": (B, 1) int32, "pos": scalar int32 — absolute position
+    of the new token}. Returns (logits fp32 (B, 1, V), new cache)."""
+    token, pos = batch["token"], batch["pos"]
+    x = _embed(cfg, params, token, compute_dtype)
+    at = cfg.arch_type
+    new_cache = dict(cache)
+
+    if at == "dense":
+        def step(h, bp_c):
+            bp, cl = bp_c
+            h2, nc = _self_block_decode(cfg, bp, h, cl, pos)
+            return h2, nc
+        x, nc = jax.lax.scan(step, x, (params["blocks"], cache["attn"]))
+        new_cache["attn"] = nc
+
+    elif at == "moe":
+        every = cfg.moe.every
+        if every == 1:
+            def step(h, bp_c):
+                bp, cl = bp_c
+                return _moe_block_decode(cfg, bp, h, cl, pos)
+            x, nc = jax.lax.scan(step, x, (params["moe_blocks"],
+                                           cache["attn"]))
+            new_cache["attn"] = nc
+        else:
+            n_moe = cfg.n_layers // every
+            n_dense_per = every - 1
+            dense = jax.tree.map(
+                lambda a: a.reshape((n_moe, n_dense_per) + a.shape[1:]),
+                params["blocks"])
+            ac = cache["attn"]
+            acg = jax.tree.map(
+                lambda a: a.reshape((n_moe, every) + a.shape[1:]), ac)
+
+            def group(h, bp_c):
+                bp, cg = bp_c
+                dcache = jax.tree.map(lambda a: a[:n_dense_per], cg)
+                mcache = jax.tree.map(lambda a: a[n_dense_per], cg)
+
+                def dstep(hh, dd_c):
+                    dd, cl = dd_c
+                    return _self_block_decode(cfg, dd, hh, cl, pos)
+                h, ndc = jax.lax.scan(dstep, h, (bp["dense"], dcache))
+                h, nmc = _moe_block_decode(cfg, bp["moe"], h, mcache, pos)
+                nc = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b[None]], axis=0),
+                    ndc, nmc)
+                return h, nc
+
+            x, ncg = jax.lax.scan(group, x,
+                                  ({"dense": dense,
+                                    "moe": params["moe_blocks"]}, acg))
+            new_cache["attn"] = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), ncg)
+
+    elif at == "ssm":
+        s = cfg.ssm
+
+        def step(h, bp_c):
+            bp, cl = bp_c
+            hn = L.rmsnorm(bp["norm"], h)
+            y, nc = S.mamba2_decode(bp["mixer"], hn, cl, d_state=s.d_state,
+                                    n_heads=s.n_heads(cfg.d_model),
+                                    headdim=s.headdim, n_groups=s.n_groups)
+            return h + y, nc
+        x, nc = jax.lax.scan(step, x, (params["blocks"], cache["mamba"]))
+        new_cache["mamba"] = nc
+
+    elif at == "hybrid":
+        s = cfg.ssm
+        ae = cfg.hybrid.attn_every
+        n_attn = cfg.n_layers // ae
+        shared = params["shared_attn"]
+        # head: n_attn groups of ae mamba layers each ending in shared attn
+        n_head_layers = n_attn * ae
+        mb = params["blocks"]
+        head = jax.tree.map(
+            lambda a: a[:n_head_layers].reshape((n_attn, ae) + a.shape[1:]),
+            mb)
+        tail = jax.tree.map(lambda a: a[n_head_layers:], mb)
+        mc = cache["mamba"]
+        head_c = jax.tree.map(
+            lambda a: a[:n_head_layers].reshape((n_attn, ae) + a.shape[1:]),
+            mc)
+        tail_c = jax.tree.map(lambda a: a[n_head_layers:], mc)
+
+        def mamba_step(h, bp_c):
+            bp, cl = bp_c
+            hn = L.rmsnorm(bp["norm"], h)
+            y, nc = S.mamba2_decode(bp["mixer"], hn, cl, d_state=s.d_state,
+                                    n_heads=s.n_heads(cfg.d_model),
+                                    headdim=s.headdim, n_groups=s.n_groups)
+            return h + y, nc
+
+        def group(h, bp_c):
+            bp, cg, ca = bp_c
+            h, ncm = jax.lax.scan(mamba_step, h, (bp, cg))
+            h, nca = _self_block_decode(cfg, shared, h, ca, pos)
+            return h, (ncm, nca)
+
+        x, (ncm_head, nc_attn) = jax.lax.scan(
+            group, x, (head, head_c, cache["attn"]))
+        x, ncm_tail = jax.lax.scan(mamba_step, x, (tail, tail_c))
+        new_cache["mamba"] = jax.tree.map(
+            lambda a, b: jnp.concatenate(
+                [a.reshape((n_head_layers,) + a.shape[2:]), b], axis=0),
+            ncm_head, ncm_tail)
+        new_cache["attn"] = nc_attn
+
+    elif at == "vlm":
+        n_groups, n_self = _vlm_layout(cfg)
+        selfs = jax.tree.map(
+            lambda a: a.reshape((n_groups, n_self) + a.shape[1:]),
+            params["blocks"])
+        sc = jax.tree.map(
+            lambda a: a.reshape((n_groups, n_self) + a.shape[1:]),
+            cache["attn"])
+
+        def group(h, bp_c):
+            bp, cg, ck, cv = bp_c
+
+            def sstep(hh, dd_c):
+                dd, cl = dd_c
+                return _self_block_decode(cfg, dd, hh, cl, pos)
+            h, nsc = jax.lax.scan(sstep, h, (bp["self"], cg))
+            h = _cross_block_decode(cfg, bp["cross"], h, ck, cv)
+            return h, nsc
+
+        x, nsc = jax.lax.scan(
+            group, x,
+            ({"self": selfs, "cross": params["cross_blocks"]}, sc,
+             cache["cross"]["k"], cache["cross"]["v"]))
+        new_cache["attn"] = jax.tree.map(
+            lambda a: a.reshape((n_groups * n_self,) + a.shape[2:]), nsc)
+
+    elif at == "audio":
+        def block(h, bp_c):
+            bp, cl, ck, cv = bp_c
+            h, nc = _self_block_decode(cfg, bp["self"], h, cl, pos)
+            h = _cross_block_decode(cfg, bp["cross"], h, ck, cv)
+            return h, nc
+        x, nc = jax.lax.scan(
+            block, x,
+            ({"self": params["blocks"], "cross": params["cross_blocks"]},
+             cache["attn"], cache["cross"]["k"], cache["cross"]["v"]))
+        new_cache["attn"] = nc
+
+    else:
+        raise ValueError(at)
+
+    return _unembed(cfg, params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that also builds the decode cache
+# ---------------------------------------------------------------------------
+
+def _self_block_prefill(cfg: ArchConfig, bp: dict, x, positions,
+                        cache_len=None):
+    h = L.apply_norm(bp["attn_norm"], x, cfg.norm)
+    attn, (k, v) = L.self_attention(
+        bp["attn"], h, positions, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
+        causal=True, window=cfg.sliding_window, return_kv=True,
+        impl=cfg.attn_impl)
+    x = x + attn
+    h = L.apply_norm(bp["mlp_norm"], x, cfg.norm)
+    x = x + L.mlp(bp["mlp"], h, act=cfg.act)
+    kv = L.kv_to_cache(k, v, cfg.sliding_window, cache_len)
+    return x, kv
+
+
+def _moe_block_prefill(cfg: ArchConfig, bp: dict, x, positions,
+                       cache_len=None):
+    dims = M.MoEDims(cfg.moe.n_experts, cfg.moe.top_k, cfg.d_model, cfg.d_ff,
+                     cfg.moe.group_size, cfg.moe.capacity_factor)
+    h = L.apply_norm(bp["attn_norm"], x, cfg.norm)
+    attn, (k, v) = L.self_attention(
+        bp["attn"], h, positions, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
+        causal=True, window=cfg.sliding_window, return_kv=True,
+        impl=cfg.attn_impl)
+    x = x + attn
+    h = L.apply_norm(bp["mlp_norm"], x, cfg.norm)
+    y, _ = M.moe_ffn(bp["moe"], h, dims)
+    kv = L.kv_to_cache(k, v, cfg.sliding_window, cache_len)
+    return x + y, kv
+
+
+def _mamba_block_prefill(cfg: ArchConfig, bp: dict, x, use_kernel=False):
+    s = cfg.ssm
+    h = L.rmsnorm(bp["norm"], x)
+    y, cache = S.mamba2_prefill(
+        bp["mixer"], h, d_state=s.d_state, n_heads=s.n_heads(cfg.d_model),
+        headdim=s.headdim, n_groups=s.n_groups, chunk=s.chunk,
+        use_kernel=use_kernel, head_shard=s.head_shard)
+    return x + y, cache
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, *,
+            compute_dtype=jnp.bfloat16, use_kernel: bool = False,
+            cache_len: Optional[int] = None):
+    """Process the prompt and build the decode cache.
+
+    batch: {"tokens": (B, S)} plus modality stubs.  `cache_len` reserves KV
+    slots beyond the prompt for subsequent decode steps (defaults to the
+    prompt length — pure scoring).  Returns (last-position logits fp32
+    (B, 1, V), cache)."""
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    x = _embed(cfg, params, tokens, compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], (B, Sq))
+    at = cfg.arch_type
+    cache: dict[str, Any] = {}
+
+    if at == "dense":
+        def step(h, bp):
+            return _self_block_prefill(cfg, bp, h, positions, cache_len)
+        x, kv = jax.lax.scan(step, x, params["blocks"])
+        cache["attn"] = kv
+
+    elif at == "moe":
+        every = cfg.moe.every
+        if every == 1:
+            def step(h, bp):
+                return _moe_block_prefill(cfg, bp, h, positions, cache_len)
+            x, kv = jax.lax.scan(step, x, params["moe_blocks"])
+            cache["attn"] = kv
+        else:
+            n_moe = cfg.n_layers // every
+            n_dense_per = every - 1
+            dense = jax.tree.map(
+                lambda a: a.reshape((n_moe, n_dense_per) + a.shape[1:]),
+                params["blocks"])
+
+            def group(h, bp):
+                def dstep(hh, dd):
+                    return _self_block_prefill(cfg, dd, hh, positions, cache_len)
+                h, kvd = jax.lax.scan(dstep, h, bp["dense"])
+                h, kvm = _moe_block_prefill(cfg, bp["moe"], h, positions,
+                                            cache_len)
+                kv = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b[None]], axis=0),
+                    kvd, kvm)
+                return h, kv
+
+            x, kvg = jax.lax.scan(group, x,
+                                  {"dense": dense,
+                                   "moe": params["moe_blocks"]})
+            cache["attn"] = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), kvg)
+
+    elif at == "ssm":
+        def step(h, bp):
+            return _mamba_block_prefill(cfg, bp, h, use_kernel=use_kernel)
+        x, mc = jax.lax.scan(step, x, params["blocks"])
+        cache["mamba"] = mc
+
+    elif at == "hybrid":
+        ae = cfg.hybrid.attn_every
+        n_attn = cfg.n_layers // ae
+        n_head_layers = n_attn * ae
+        shared = params["shared_attn"]
+        mb = params["blocks"]
+        head = jax.tree.map(
+            lambda a: a[:n_head_layers].reshape((n_attn, ae) + a.shape[1:]),
+            mb)
+        tail = jax.tree.map(lambda a: a[n_head_layers:], mb)
+
+        def mstep(h, bp):
+            return _mamba_block_prefill(cfg, bp, h, use_kernel=use_kernel)
+
+        def group(h, bp):
+            h, mc = jax.lax.scan(mstep, h, bp)
+            h, kv = _self_block_prefill(cfg, shared, h, positions, cache_len)
+            return h, (mc, kv)
+
+        x, (mc_head, kva) = jax.lax.scan(group, x, head)
+        x, mc_tail = jax.lax.scan(mstep, x, tail)
+        cache["mamba"] = jax.tree.map(
+            lambda a, b: jnp.concatenate(
+                [a.reshape((n_head_layers,) + a.shape[2:]), b], axis=0),
+            mc_head, mc_tail)
+        cache["attn"] = kva
+
+    elif at == "vlm":
+        n_groups, n_self = _vlm_layout(cfg)
+        memory = batch["patches"].astype(x.dtype)
+        selfs = jax.tree.map(
+            lambda a: a.reshape((n_groups, n_self) + a.shape[1:]),
+            params["blocks"])
+
+        def group(h, bp):
+            def sstep(hh, dd):
+                return _self_block_prefill(cfg, dd, hh, positions, cache_len)
+            h, kv = jax.lax.scan(sstep, h, bp["self"])
+            h = _cross_block(cfg, bp["cross"], h, memory)
+            return h, kv
+
+        x, kvg = jax.lax.scan(
+            group, x, {"self": selfs, "cross": params["cross_blocks"]})
+        cache["attn"] = jax.tree.map(
+            lambda a: a.reshape((n_groups * n_self,) + a.shape[2:]), kvg)
+        cache["cross"] = _vlm_cross_kv(cfg, params, batch)
+
+    elif at == "audio":
+        frames = batch["frames"].astype(x.dtype)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(frames.shape[1])[None, :], frames.shape[:2])
+        enc = _scan_blocks(
+            lambda h, bp: _self_block(cfg, bp, h, enc_pos, causal=False),
+            params["enc_blocks"], frames)
+        enc = L.apply_norm(params["enc_norm"], enc, cfg.norm)
+
+        def one_cross_kv(cb):
+            return L.project_cross_kv(cb["attn"], enc,
+                                      n_kv_heads=cfg.n_kv_heads,
+                                      head_dim=cfg.hd)
+        cks, cvs = jax.vmap(one_cross_kv)(params["cross_blocks"])
+
+        def block(h, bp_c):
+            bp, ck, cv = bp_c
+            h, kv = _self_block_prefill(cfg, bp["self"], h, positions, cache_len)
+            h = _cross_block_decode(cfg, bp["cross"], h, ck, cv)
+            return h, kv
+
+        x, kv = jax.lax.scan(
+            block, x,
+            ({"self": params["blocks"], "cross": params["cross_blocks"]},
+             cks, cvs))
+        cache["attn"] = kv
+        cache["cross"] = {"k": cks, "v": cvs}
+
+    else:
+        raise ValueError(at)
+
+    logits = _unembed(cfg, params, x[:, -1:, :])
+    return logits, cache

@@ -1,0 +1,7 @@
+"""Optimizers in pure JAX: SGD(+momentum), Adam/AdamW with fp32 or bf16
+moment states (bf16 for the >100B configs so optimizer memory fits HBM)."""
+from .optimizers import (OptState, adamw, init_opt_state, sgd,
+                         apply_updates, make_optimizer)
+
+__all__ = ["OptState", "adamw", "sgd", "init_opt_state", "apply_updates",
+           "make_optimizer"]

@@ -1,0 +1,110 @@
+"""Minimal optimizer library (no external deps).
+
+API mirrors optax loosely: an optimizer is a pair of pure functions
+(init(params) -> state, update(grads, state, params) -> (updates, state)).
+`make_optimizer(name, ...)` builds one from a config string.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Optional[dict]      # first moment / momentum (None for plain SGD)
+    nu: Optional[dict]      # second moment (Adam only)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[dict], OptState]
+    update: Callable[[dict, OptState, dict], tuple[dict, OptState]]
+
+
+def _zeros_like_dtype(params: dict, dtype) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype),
+                        params)
+
+
+def sgd(lr: float, momentum: float = 0.0,
+        state_dtype=None) -> Optimizer:
+    def init(params):
+        mu = _zeros_like_dtype(params, state_dtype) if momentum else None
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads, state, params, lr_scale=1.0):
+        step_lr = lr * lr_scale
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: (momentum * m.astype(jnp.float32)
+                              + g.astype(jnp.float32)).astype(m.dtype),
+                state.mu, grads)
+            updates = jax.tree.map(
+                lambda m: -step_lr * m.astype(jnp.float32), mu)
+        else:
+            mu = None
+            updates = jax.tree.map(
+                lambda g: -step_lr * g.astype(jnp.float32), grads)
+        return updates, OptState(state.step + 1, mu, None)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=None) -> Optimizer:
+    """AdamW.  `state_dtype=jnp.bfloat16` halves optimizer memory — used for
+    the 123B/400B dry-run configs (DESIGN.md §5)."""
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        _zeros_like_dtype(params, state_dtype),
+                        _zeros_like_dtype(params, state_dtype))
+
+    def update(grads, state, params, lr_scale=1.0):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        step_lr = lr * lr_scale
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m32 / c1
+            vhat = v32 / c2
+            u = -step_lr * (mhat / (jnp.sqrt(vhat) + eps)
+                            + weight_decay * p.astype(jnp.float32))
+            return u, m32.astype(m.dtype), v32.astype(v.dtype)
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: dict, updates: dict) -> dict:
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def init_opt_state(opt: Optimizer, params: dict) -> OptState:
+    return opt.init(params)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,5 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from .hlo_graph import module_stats
+from .analysis import roofline_terms, model_flops
+
+__all__ = ["module_stats", "roofline_terms", "model_flops"]

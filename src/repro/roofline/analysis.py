@@ -1,0 +1,101 @@
+"""Three-term roofline from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+FLOP/byte/collective totals come from `hlo_graph.module_stats` (trip-count
+corrected); the terms are per-device seconds assuming perfect balance
+(the parsed module is the per-device partitioned program, so totals are
+already per-device).  MODEL_FLOPS = 6 * N_active * tokens gives the
+useful-compute ratio.
+"""
+from __future__ import annotations
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from .hlo_graph import module_stats
+
+
+def active_params(cfg: ArchConfig) -> float:
+    """Approximate active (per-token) parameter count, excluding embeddings.
+
+    MoE counts top_k experts per MoE layer; the rest is dense."""
+    d = cfg.d_model
+    hd = cfg.hd if cfg.n_heads else 0
+    n_attn = cfg.n_heads * hd
+    n_kv = cfg.n_kv_heads * hd
+    attn = d * (n_attn + 2 * n_kv) + n_attn * d
+    mlp = 3 * d * cfg.d_ff if cfg.act == "swiglu" else 2 * d * cfg.d_ff
+    if cfg.arch_type == "ssm":
+        s = cfg.ssm
+        h = s.n_heads(d)
+        d_inner = h * s.headdim
+        mix = d * (2 * d_inner + 2 * s.n_groups * s.d_state + h) + d_inner * d
+        return cfg.n_layers * mix
+    if cfg.arch_type == "hybrid":
+        s = cfg.ssm
+        h = s.n_heads(d)
+        d_inner = h * s.headdim
+        mix = d * (2 * d_inner + 2 * s.n_groups * s.d_state + h) + d_inner * d
+        n_attn_apps = cfg.n_layers // cfg.hybrid.attn_every
+        return cfg.n_layers * mix + n_attn_apps * (attn + mlp)
+    if cfg.arch_type == "moe":
+        every = cfg.moe.every
+        n_moe = cfg.n_layers // every
+        n_dense = cfg.n_layers - n_moe
+        moe_mlp = cfg.moe.top_k * mlp
+        return cfg.n_layers * attn + n_moe * moe_mlp + n_dense * mlp
+    if cfg.arch_type == "vlm":
+        # cross layers add cross-attn on top of self layers
+        n_groups = cfg.n_layers // cfg.vlm.cross_every
+        return cfg.n_layers * (attn + mlp)  # cross ~ self in cost
+    if cfg.arch_type == "audio":
+        enc = cfg.encdec.n_enc_layers * (attn + mlp)
+        dec = cfg.n_layers * (2 * attn + mlp)  # self + cross
+        return enc + dec
+    return cfg.n_layers * (attn + mlp)
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    """6 * N_active * D-tokens for training; 2 * N_active * tokens for
+    inference shapes (forward only)."""
+    spec = INPUT_SHAPES[shape_name]
+    n_act = active_params(cfg)
+    if spec["kind"] == "train":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 6.0 * n_act * tokens
+    if spec["kind"] == "prefill":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * spec["global_batch"]
+
+
+def roofline_terms(hlo_text: str, n_devices: int,
+                   peak_flops: float = PEAK_FLOPS_BF16,
+                   hbm_bw: float = HBM_BW,
+                   ici_bw: float = ICI_BW) -> dict:
+    """Per-device roofline seconds from the partitioned module text.
+
+    The compiled module is already the per-device program, so its totals are
+    per-device; `n_devices` is recorded for reference only."""
+    st = module_stats(hlo_text)
+    coll_bytes = sum(v for k, v in st["collectives"].items()
+                     if not k.startswith("n_"))
+    return {
+        "flops": st["flops"],
+        "bytes": st["bytes"],
+        "collective_bytes": coll_bytes,
+        "collectives": st["collectives"],
+        "t_compute": st["flops"] / peak_flops,
+        "t_memory": st["bytes"] / hbm_bw,
+        "t_collective": coll_bytes / ici_bw,
+        "n_devices": n_devices,
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    vals = {"compute": terms["t_compute"], "memory": terms["t_memory"],
+            "collective": terms["t_collective"]}
+    return max(vals, key=vals.get)

@@ -1,0 +1,323 @@
+"""HLO-text computation-graph statistics with while-loop trip-count scaling.
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE, so with
+scan-over-layers the reported FLOPs/bytes are ~L x too small.  This module
+re-derives the totals from the compiled module text:
+
+  * computations are parsed into {instr name -> (op, result shape, attrs)};
+  * while instructions get a trip count from their condition computation
+    (jax lowers `lax.scan` to `while (i < L)` with a literal constant);
+  * multipliers propagate ENTRY -> called computations (body x trip,
+    condition x trip+1, call/conditional x 1);
+  * dot FLOPs   = 2 * numel(result) * prod(contracting dims)  (per instr);
+  * HBM bytes   ~ sum over non-fusion-internal instructions of
+                  (operand bytes + result bytes) — a traffic proxy that
+                  ignores in-place aliasing (documented in EXPERIMENTS.md);
+  * collective bytes per kind, same multiplier scaling.
+
+This is structural dry-run profiling: exact for FLOPs of matmul-dominated
+models, a consistent proxy for memory traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<type>.+?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>.*?)\)(?P<attrs>.*)$")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_CALLED = re.compile(
+    r"(?:condition|body|to_apply|calls|branch_computations)=\{?%?"
+    r"([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    type_str: str
+    args: str
+    attrs: str
+
+
+def _shape_numel_bytes(type_str: str) -> tuple[int, int]:
+    """(total elements, total bytes) over all shapes in a type string."""
+    n_total, b_total = 0, 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+        b_total += n * _DTYPE_BYTES[dt]
+    return n_total, b_total
+
+
+def parse_computations(hlo: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    cur_name = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip()) if "{" in line else None
+            if m and "->" in line:
+                cur_name, cur = m.group("name"), []
+            continue
+        if line.strip() == "}":
+            comps[cur_name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            cur.append(Instr(m.group("name"), m.group("op"),
+                             m.group("type"), m.group("args"),
+                             m.group("attrs")))
+    return comps
+
+
+def _entry_name(hlo: str, comps: dict[str, list[Instr]]) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.MULTILINE)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: the computation that is not called by anyone
+    called = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            for grp in _CALLED.findall(ins.attrs):
+                for nm in re.split(r",\s*%?", grp):
+                    called.add(nm)
+    for name in comps:
+        if name not in called:
+            return name
+    return next(iter(comps))
+
+
+def _trip_count(cond: list[Instr]) -> int:
+    """Extract N from `while (i < N)`-style conditions (1 if unknown)."""
+    consts = {}
+    for ins in cond:
+        if ins.op == "constant":
+            mm = re.search(r"(-?\d+)", ins.args)
+            if mm:
+                consts[ins.name] = int(mm.group(1))
+    for ins in cond:
+        if ins.op == "compare" and "direction=LT" in ins.attrs:
+            for arg in re.findall(r"%([\w\.\-]+)", ins.args):
+                if arg in consts:
+                    return max(consts[arg], 1)
+        if ins.op == "compare" and "direction=GT" in ins.attrs:
+            for arg in re.findall(r"%([\w\.\-]+)", ins.args):
+                if arg in consts:
+                    return max(consts[arg], 1)
+    return 1
+
+
+def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
+    """2 * numel(result) * prod(lhs contracting dim sizes)."""
+    n_res, _ = _shape_numel_bytes(ins.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if not m:
+        return 2.0 * n_res  # degenerate dot
+    dims = [int(d) for d in m.group(1).split(",") if d]
+    args = re.findall(r"%([\w\.\-]+)", ins.args)
+    if not args:
+        return 2.0 * n_res
+    lhs_type = shapes.get(args[0], "")
+    sm = _SHAPE.search(lhs_type)
+    if not sm:
+        return 2.0 * n_res
+    lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    k = 1
+    for d in dims:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    return 2.0 * n_res * k
+
+
+def module_stats(hlo: str) -> dict:
+    """Trip-count-corrected totals for the whole module.
+
+    Returns {"flops", "bytes", "collectives": {kind: bytes, n_kind: count},
+             "per_computation": {...}}."""
+    comps = parse_computations(hlo)
+    entry = _entry_name(hlo, comps)
+
+    # computation name -> (root op, shapes map) for fusion-root inspection
+    roots: dict[str, str] = {}
+    all_shapes: dict[str, dict[str, str]] = {}
+    for cname, instrs in comps.items():
+        all_shapes[cname] = {i.name: i.type_str for i in instrs}
+        roots[cname] = instrs[-1].op if instrs else ""
+
+    def _hbm_bytes(ins: Instr, shapes: dict[str, str]) -> float:
+        """HBM-traffic estimate for one instruction's write side.
+
+        dynamic-update-slice writes in place: only the update operand's
+        bytes move (counting the whole result would bill a scan's stacked
+        output once per iteration).  Fusions rooted at a DUS likewise.
+        bf16 dots that XLA:CPU upcasts to f32 are billed at bf16 (the MXU
+        emits bf16; the f32 working copy is a host-backend artifact)."""
+        if ins.op == "dynamic-update-slice":
+            ops_ = re.findall(r"%([\w\.\-]+)", ins.args)
+            if len(ops_) >= 2 and ops_[1] in shapes:
+                _, b = _shape_numel_bytes(shapes[ops_[1]])
+                return b
+        if ins.op == "fusion":
+            mc = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+            callee = mc.group(1) if mc else None
+            if callee and callee in comps:
+                # walk back through convert/bitcast wrappers to find a DUS
+                # root: the fusion then writes only the update slice.
+                cshapes = all_shapes.get(callee, {})
+                cur = comps[callee][-1]
+                depth = 0
+                while cur.op in ("convert", "bitcast", "copy",
+                                 "transpose", "reshape") and depth < 4:
+                    ops_ = re.findall(r"%([\w\.\-]+)", cur.args)
+                    nxt = next((i2 for i2 in comps[callee]
+                                if ops_ and i2.name == ops_[0]), None)
+                    if nxt is None:
+                        break
+                    cur = nxt
+                    depth += 1
+                if cur.op == "dynamic-update-slice":
+                    ops_ = re.findall(r"%([\w\.\-]+)", cur.args)
+                    if len(ops_) >= 2 and ops_[1] in cshapes:
+                        n_upd, _ = _shape_numel_bytes(cshapes[ops_[1]])
+                        # bill at the fusion RESULT's element size (an f32
+                        # stacking buffer converted to bf16 is a CPU
+                        # artifact; TPU stores the logical dtype)
+                        n_res, b_res = _shape_numel_bytes(ins.type_str)
+                        elem = b_res / max(n_res, 1)
+                        return n_upd * elem
+        _, b = _shape_numel_bytes(ins.type_str)
+        if ins.op == "dot" and "f32[" in ins.type_str:
+            ops_ = re.findall(r"%([\w\.\-]+)", ins.args)
+            if ops_ and all("bf16[" in shapes.get(o, "")
+                            for o in ops_ if o in shapes) \
+                    and any(o in shapes for o in ops_):
+                return b / 2
+        return b
+
+    # per-computation local stats
+    local = {}
+    whiles = {}          # comp -> list of (cond, body, trip)
+    calls = defaultdict(list)   # comp -> list of (callee, kind)
+    for cname, instrs in comps.items():
+        shapes = all_shapes[cname]
+        # parameters keep their declared type via the instr itself
+        flops = 0.0
+        bytes_ = 0.0
+        coll = defaultdict(float)
+        for ins in instrs:
+            if ins.op == "dot":
+                flops += _dot_flops(ins, shapes)
+            base_op = ins.op.replace("-start", "").replace("-done", "")
+            if base_op in COLLECTIVES and not ins.op.endswith("-done"):
+                _, b = _shape_numel_bytes(ins.type_str)
+                # XLA:CPU's all-reduce promoter upcasts bf16 all-reduces to
+                # f32 (reduction computation renamed *_promoted); TPU keeps
+                # bf16 on the wire, so count pre-promotion bytes.
+                if "promoted" in ins.attrs and "f32" in ins.type_str:
+                    b //= 2
+                coll[base_op] += b
+                coll[f"n_{base_op}"] += 1
+            # HBM traffic proxy: results of "real" ops (skip metadata ops)
+            if ins.op not in ("parameter", "constant", "tuple",
+                              "get-tuple-element", "bitcast", "while",
+                              "conditional", "call"):
+                bytes_ += _hbm_bytes(ins, shapes)
+            # called computations
+            for grp in _CALLED.findall(ins.attrs):
+                names = [n for n in re.split(r",\s*%?", grp) if n in comps]
+                if ins.op == "while":
+                    mcond = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+                    mbody = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                    if mcond and mbody:
+                        # prefer XLA's own known_trip_count annotation
+                        mk = re.search(
+                            r"known_trip_count[^0-9]*(\d+)", ins.attrs)
+                        trip = (int(mk.group(1)) if mk else
+                                _trip_count(comps.get(mcond.group(1), [])))
+                        whiles.setdefault(cname, []).append(
+                            (mcond.group(1), mbody.group(1), trip))
+                    break
+                if ins.op == "fusion":
+                    # fusion-internal instrs are not HBM traffic; but count
+                    # dots inside (CPU may keep dots in fusions)
+                    for nm in names:
+                        calls[cname].append((nm, "fusion"))
+                else:
+                    for nm in names:
+                        calls[cname].append((nm, "call"))
+        local[cname] = {"flops": flops, "bytes": bytes_, "coll": dict(coll)}
+
+    # propagate multipliers from entry.  Two channels: `mult` flows through
+    # every edge (FLOPs/collectives); `mult_b` stops at fusion edges —
+    # fusion-internal instructions are registers/VMEM, not HBM traffic.
+    # edges: (caller, callee, multiplier_factor, counts_for_bytes)
+    edges: list[tuple[str, str, float, bool]] = []
+    for c in comps:
+        for cond, body, trip in whiles.get(c, []):
+            edges.append((c, cond, trip + 1, True))
+            edges.append((c, body, trip, True))
+        for nm, kind in calls.get(c, []):
+            edges.append((c, nm, 1.0, kind != "fusion"))
+
+    # Kahn topological order over the computation DAG (callers first)
+    indeg = defaultdict(int)
+    out_edges = defaultdict(list)
+    for a, b, k, by in edges:
+        indeg[b] += 1
+        out_edges[a].append((b, k, by))
+    queue = [c for c in comps if indeg[c] == 0]
+    topo = []
+    while queue:
+        c = queue.pop()
+        topo.append(c)
+        for b, k, by in out_edges[c]:
+            indeg[b] -= 1
+            if indeg[b] == 0:
+                queue.append(b)
+
+    mult = defaultdict(float)
+    mult_b = defaultdict(float)
+    mult[entry] = mult_b[entry] = 1.0
+    for c in topo:
+        for b, k, by in out_edges[c]:
+            mult[b] += mult[c] * k
+            if by:
+                mult_b[b] += mult_b[c] * k
+
+    total_flops = 0.0
+    total_bytes = 0.0
+    total_coll = defaultdict(float)
+    per_comp = {}
+    for cname, st in local.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        total_flops += st["flops"] * m
+        total_bytes += st["bytes"] * mult_b.get(cname, 0.0)
+        for k, v in st["coll"].items():
+            total_coll[k] += v * m
+        if st["flops"] or st["coll"]:
+            per_comp[cname] = {"mult": m, **st}
+    return {"flops": total_flops, "bytes": total_bytes,
+            "collectives": dict(total_coll), "entry": entry,
+            "per_computation": per_comp}

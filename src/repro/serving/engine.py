@@ -1,0 +1,140 @@
+"""Continuous-batching serving engine (vLLM-style slot management on a
+fixed-shape decode step).
+
+The jitted `decode_step` has a static batch (the `decode_32k` shape's
+global_batch on the pod); requests arrive asynchronously and are mapped
+onto free slots:
+
+  * arriving requests are prefilled one at a time (padded to the prefill
+    bucket) and their per-slot cache rows spliced into the live batch
+    cache (`dynamic_update_slice` on the batch dim — slot writes are cheap
+    and shard-local, the batch dim is the `data` axis);
+  * every engine step decodes ONE token for all active slots; finished or
+    empty slots keep decoding garbage into a scratch row (masked out) so
+    the compiled step never re-specializes;
+  * per-slot position counters let slots run at different sequence offsets
+    within the same fixed-size cache.
+
+This is a single-host reference (the distributed version shards the slot
+batch over `data` and is exercised compile-only in the dry-run); it runs
+real end-to-end on CPU with reduced configs (tests/test_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int
+    out_tokens: list = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, n_slots: int,
+                 max_seq: int, compute_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.compute_dtype = compute_dtype
+        self.cache = T.init_cache(cfg, n_slots, max_seq,
+                                  dtype=compute_dtype)
+        self.positions = np.zeros(n_slots, dtype=np.int64)  # next pos per slot
+        self.active: dict[int, Request] = {}                # slot -> request
+        self.last_token = np.zeros(n_slots, dtype=np.int32)
+
+        def _decode(params, cache, tokens, pos_vec):
+            # every slot decodes at its OWN absolute position: vmap a
+            # single-slot decode over the cache's batch (slot) dim so the
+            # per-slot `pos` stays a scalar inside the model.
+            def one(p, c, t, q):
+                c1 = jax.tree.map(lambda a: a[:, None], c)  # re-add batch
+                batch = {"token": t[None, None], "pos": q}
+                logits, nc = T.decode_step(self.cfg, p, batch, c1,
+                                           compute_dtype=compute_dtype)
+                return logits[0, 0], jax.tree.map(lambda a: a[:, 0], nc)
+
+            slot_axes = jax.tree.map(lambda _: 1, cache)
+            logits, nc = jax.vmap(one, in_axes=(None, slot_axes, 0, 0),
+                                  out_axes=(0, slot_axes))(
+                params, cache, tokens, pos_vec)
+            return logits, nc
+
+        self._decode = jax.jit(_decode)
+
+        def _prefill(params, tokens):
+            return T.prefill(self.cfg, params, {"tokens": tokens},
+                             compute_dtype=compute_dtype,
+                             cache_len=max_seq)
+        self._prefill = jax.jit(_prefill)
+
+    # ------------------------------------------------------------------
+    def try_admit(self, req: Request) -> bool:
+        """Prefill a request into a free slot; False if engine is full."""
+        free = [s for s in range(self.n_slots) if s not in self.active]
+        if not free:
+            return False
+        slot = free[0]
+        toks = jnp.asarray(req.prompt, dtype=jnp.int32)[None, :]
+        logits, cache1 = self._prefill(self.params, toks)
+        # splice this request's cache rows into the live batch cache
+        self.cache = jax.tree.map(
+            lambda live, new: jax.lax.dynamic_update_slice_in_dim(
+                live, new.astype(live.dtype), slot, axis=1),
+            self.cache, cache1)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(tok)
+        req.slot = slot
+        self.active[slot] = req
+        self.positions[slot] = len(req.prompt)
+        self.last_token[slot] = tok
+        return True
+
+    def step(self) -> list[Request]:
+        """Decode one token for every active slot; returns finished reqs."""
+        if not self.active:
+            return []
+        tokens = jnp.asarray(self.last_token)
+        pos = jnp.asarray(self.positions, dtype=jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, tokens,
+                                          pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self.positions[slot] += 1
+            self.last_token[slot] = tok
+            if req.done or self.positions[slot] >= self.max_seq - 1:
+                finished.append(req)
+                del self.active[slot]
+        return finished
+
+    def run(self, requests: list[Request], max_steps: int = 10_000
+            ) -> list[Request]:
+        """Drive a queue of requests to completion (continuous batching)."""
+        pending = list(requests)
+        done: list[Request] = []
+        steps = 0
+        while (pending or self.active) and steps < max_steps:
+            while pending and self.try_admit(pending[0]):
+                pending.pop(0)
+            done.extend(self.step())
+            steps += 1
+        return done

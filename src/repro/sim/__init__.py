@@ -1,0 +1,6 @@
+"""Wall-clock simulation of heterogeneous federated fleets (paper §IV)."""
+from .network import FleetSpec, make_fleet, paper_fleet
+from .simulator import SimResult, run_uncoded, run_cfl, convergence_time, coding_gain
+
+__all__ = ["FleetSpec", "make_fleet", "paper_fleet", "SimResult",
+           "run_uncoded", "run_cfl", "convergence_time", "coding_gain"]

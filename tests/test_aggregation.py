@@ -1,0 +1,139 @@
+"""Tests for gradient computation and deadline-masked aggregation (Eqs. 18-19)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.core import cfl
+from repro.core.delay_model import DeviceDelayParams
+
+
+def _data(key, n=6, ell=40, d=16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    xs = jax.random.normal(k1, (n, ell, d))
+    beta_true = jax.random.normal(k2, (d,))
+    ys = jnp.einsum("nld,d->nl", xs, beta_true) + 0.1 * jax.random.normal(k3, (n, ell))
+    return xs, ys, beta_true
+
+
+def test_uncoded_gradient_matches_flat():
+    xs, ys, _ = _data(jax.random.PRNGKey(0))
+    beta = jnp.zeros(xs.shape[-1])
+    g = agg.uncoded_full_gradient(xs, ys, beta)
+    x_flat = np.asarray(xs).reshape(-1, xs.shape[-1])
+    y_flat = np.asarray(ys).reshape(-1)
+    np.testing.assert_allclose(np.asarray(g),
+                               x_flat.T @ (x_flat @ np.asarray(beta) - y_flat),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_partial_gradients_respect_load_mask():
+    xs, ys, _ = _data(jax.random.PRNGKey(1))
+    n, ell, d = xs.shape
+    loads = np.array([0, 10, 40, 25, 1, 39])
+    mask = jnp.asarray(np.arange(ell)[None, :] < loads[:, None], dtype=xs.dtype)
+    beta = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    partials = agg.client_partial_gradients(xs, ys, mask, beta)
+    for i in range(n):
+        xi = np.asarray(xs[i, :loads[i]])
+        yi = np.asarray(ys[i, :loads[i]])
+        expect = xi.T @ (xi @ np.asarray(beta) - yi) if loads[i] else np.zeros(d)
+        np.testing.assert_allclose(np.asarray(partials[i]), expect,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_full_coverage_sum_equals_total():
+    """mask=all received + no parity => combine == uncoded full gradient."""
+    xs, ys, _ = _data(jax.random.PRNGKey(3))
+    n, ell, d = xs.shape
+    beta = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    partials = agg.client_partial_gradients(xs, ys, jnp.ones((n, ell)), beta)
+    combined = agg.combine(partials, jnp.ones(n), jnp.zeros(d), jnp.asarray(0.0))
+    np.testing.assert_allclose(np.asarray(combined),
+                               np.asarray(agg.uncoded_full_gradient(xs, ys, beta)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_parity_gradient_lln():
+    """(1/c) X~^T (X~ b - y~) -> X^T W^2 (X b - y) as c grows (Eq. 18)."""
+    key = jax.random.PRNGKey(5)
+    xs, ys, _ = _data(key, n=4, ell=30, d=8)
+    n, ell, d = xs.shape
+    w = jax.random.uniform(jax.random.PRNGKey(6), (n, ell), minval=0.2, maxval=1.0)
+    beta = jax.random.normal(jax.random.PRNGKey(7), (d,))
+
+    from repro.core.encoding import encode_fleet
+    errs = []
+    target = None
+    x_flat = np.asarray(xs).reshape(-1, d)
+    y_flat = np.asarray(ys).reshape(-1)
+    w_flat = np.asarray(w).reshape(-1)
+    resid = x_flat @ np.asarray(beta) - y_flat
+    target = x_flat.T @ (w_flat ** 2 * resid)
+    for c in [200, 2000, 20000]:
+        xp, yp = encode_fleet(jax.random.PRNGKey(8), xs, ys, w, c)
+        g = np.asarray(agg.parity_gradient(xp, yp, beta))
+        errs.append(np.linalg.norm(g - target) / np.linalg.norm(target))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 0.05
+
+
+def test_epoch_gradient_unbiased_monte_carlo():
+    """E over (G, arrival masks) of the CFL gradient ~= full gradient."""
+    key = jax.random.PRNGKey(9)
+    xs, ys, _ = _data(key, n=5, ell=20, d=6)
+    n, ell, d = xs.shape
+    rngs = np.random.default_rng(0)
+    beta = jax.random.normal(jax.random.PRNGKey(10), (d,))
+
+    # synthetic plan: each device processes first half; P(return) = 0.6
+    loads = np.full(n, ell // 2)
+    p_ret = 0.6
+    w = np.ones((n, ell), dtype=np.float32)
+    w[:, :ell // 2] = np.sqrt(1 - p_ret)
+
+    from repro.core.encoding import encode_fleet
+
+    full = np.asarray(agg.uncoded_full_gradient(xs, ys, beta))
+    acc = np.zeros(d)
+    trials = 300
+    c = 600
+    mask_load = jnp.asarray(np.arange(ell)[None, :] < loads[:, None],
+                            dtype=xs.dtype)
+    for t in range(trials):
+        xp, yp = encode_fleet(jax.random.PRNGKey(100 + t), xs, ys,
+                              jnp.asarray(w), c)
+        received = jnp.asarray(rngs.random(n) < p_ret, dtype=xs.dtype)
+        partials = agg.client_partial_gradients(xs, ys, mask_load, beta)
+        g_par = agg.parity_gradient(xp, yp, beta)
+        g = agg.combine(partials, received, g_par, jnp.asarray(1.0))
+        acc += np.asarray(g)
+    acc /= trials
+    rel = np.linalg.norm(acc - full) / np.linalg.norm(full)
+    assert rel < 0.08, rel
+
+
+def test_gd_update_direction():
+    xs, ys, beta_true = _data(jax.random.PRNGKey(11))
+    beta = jnp.zeros(xs.shape[-1])
+    g = agg.uncoded_full_gradient(xs, ys, beta)
+    m = xs.shape[0] * xs.shape[1]
+    beta2 = agg.gd_update(beta, g, 0.01, m)
+    assert agg.nmse(beta2, beta_true) < agg.nmse(beta, beta_true)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 5), ell=st.integers(2, 16), d=st.integers(1, 12))
+def test_combine_linear_in_masks(n, ell, d):
+    """combine() is linear in the arrival masks (property)."""
+    key = jax.random.PRNGKey(n + 10 * ell + 100 * d)
+    partials = jax.random.normal(key, (n, d))
+    g_par = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    r1 = np.asarray(jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (n,)),
+                    dtype=np.float32)
+    full = agg.combine(partials, jnp.ones(n), g_par, jnp.asarray(1.0))
+    part = agg.combine(partials, jnp.asarray(r1), g_par, jnp.asarray(1.0))
+    rest = agg.combine(partials, jnp.asarray(1.0 - r1), g_par, jnp.asarray(0.0))
+    np.testing.assert_allclose(np.asarray(part) + np.asarray(rest),
+                               np.asarray(full), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,106 @@
+"""Unit + property tests for the §II-A delay model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.delay_model import (DeviceDelayParams, compute_cdf,
+                                    sample_total, total_cdf)
+
+
+def _fleet(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return DeviceDelayParams(
+        a=rng.uniform(1e-3, 1e-1, n),
+        mu=rng.uniform(10.0, 1000.0, n),
+        tau=rng.uniform(0.01, 2.0, n),
+        p=rng.uniform(0.0, 0.3, n),
+    )
+
+
+def test_mean_total_matches_eq8():
+    params = _fleet()
+    ell = np.array([10, 20, 0, 5])
+    expected = ell * (params.a + 1.0 / params.mu) + 2 * params.tau / (1 - params.p)
+    np.testing.assert_allclose(params.mean_total(ell), expected)
+
+
+def test_mean_total_server_has_no_comm_leg():
+    server = DeviceDelayParams(a=np.array([1e-3]), mu=np.array([2000.0]),
+                               tau=np.zeros(1), p=np.zeros(1))
+    np.testing.assert_allclose(server.mean_total(np.array([100])),
+                               100 * (1e-3 + 1 / 2000.0))
+
+
+def test_compute_cdf_is_shifted_exponential():
+    params = _fleet(1)
+    ell = 50
+    shift = ell * params.a[0]
+    assert compute_cdf(params, ell, shift * 0.99)[0] == 0.0
+    gamma = params.mu[0] / ell
+    t = shift + 3.0 / gamma
+    np.testing.assert_allclose(compute_cdf(params, ell, t)[0],
+                               1 - np.exp(-3.0), rtol=1e-12)
+
+
+def test_total_cdf_monotone_in_t():
+    params = _fleet()
+    ell = np.array([10, 20, 30, 5])
+    ts = np.linspace(0.0, 20.0, 50)
+    vals = np.stack([total_cdf(params, ell, t) for t in ts])
+    assert np.all(np.diff(vals, axis=0) >= -1e-12)
+
+
+def test_total_cdf_limits():
+    params = _fleet()
+    ell = np.full(4, 10)
+    assert np.all(total_cdf(params, ell, 0.0) == 0.0)
+    big_t = float(np.max(params.mean_total(ell))) * 50
+    assert np.all(total_cdf(params, ell, big_t) > 0.999)
+
+
+def test_total_cdf_matches_empirical():
+    params = _fleet(3, seed=1)
+    ell = np.array([40, 5, 100])
+    rng = np.random.default_rng(2)
+    samples = sample_total(params, ell, rng, size=40000)
+    for t in [0.5, 2.0, 8.0]:
+        emp = (samples <= t).mean(axis=0)
+        ana = total_cdf(params, ell, t)
+        np.testing.assert_allclose(emp, ana, atol=0.01)
+
+
+def test_zero_load_is_comm_only():
+    params = _fleet(1)
+    # with ell = 0, T = (N_d + N_u) tau; at t = 2 tau: P = P(K = 2) = (1-p)^2
+    t = 2 * params.tau[0] + 1e-9
+    np.testing.assert_allclose(total_cdf(params, 0, t)[0],
+                               (1 - params.p[0]) ** 2, rtol=1e-9)
+
+
+def test_sampler_zero_load_no_nan():
+    params = _fleet()
+    rng = np.random.default_rng(0)
+    s = sample_total(params, np.zeros(4), rng, size=100)
+    assert np.all(np.isfinite(s)) and np.all(s > 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    a=st.floats(1e-4, 1e-1), mu=st.floats(1.0, 1e4),
+    tau=st.floats(1e-3, 5.0), p=st.floats(0.0, 0.45),
+    ell=st.integers(0, 500), t=st.floats(0.0, 100.0),
+)
+def test_cdf_is_probability(a, mu, tau, p, ell, t):
+    params = DeviceDelayParams(a=np.array([a]), mu=np.array([mu]),
+                               tau=np.array([tau]), p=np.array([p]))
+    v = total_cdf(params, ell, t)[0]
+    assert 0.0 <= v <= 1.0 + 1e-12
+
+
+def test_invalid_params_rejected():
+    with pytest.raises(ValueError):
+        DeviceDelayParams(a=np.ones(2), mu=np.ones(2), tau=np.ones(2),
+                          p=np.array([0.1, 1.0]))
+    with pytest.raises(ValueError):
+        DeviceDelayParams(a=np.ones(2), mu=np.ones(3), tau=np.ones(2),
+                          p=np.ones(2) * 0.1)

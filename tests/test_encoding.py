@@ -1,0 +1,93 @@
+"""Tests for the §III-A distributed random linear encoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import encode_client, encode_fleet, generator_matrix
+
+
+def test_generator_matrix_stats():
+    key = jax.random.PRNGKey(0)
+    g = generator_matrix(key, 2000, 64, kind="normal")
+    assert g.shape == (2000, 64)
+    # E[G^T G] / c -> I (the law-of-large-numbers identity behind Eq. 18)
+    gram = (g.T @ g) / 2000
+    np.testing.assert_allclose(np.asarray(gram), np.eye(64), atol=0.12)
+
+
+def test_generator_matrix_bernoulli():
+    key = jax.random.PRNGKey(1)
+    g = generator_matrix(key, 1000, 32, kind="bernoulli")
+    assert set(np.unique(np.asarray(g))) <= {-1.0, 1.0}
+    gram = (g.T @ g) / 1000
+    np.testing.assert_allclose(np.asarray(gram), np.eye(32), atol=0.15)
+
+
+def test_generator_matrix_unknown_kind():
+    with pytest.raises(ValueError):
+        generator_matrix(jax.random.PRNGKey(0), 4, 4, kind="nope")
+
+
+def test_encode_client_matches_matrix_form():
+    key = jax.random.PRNGKey(2)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ell, d, c = 20, 8, 12
+    x = jax.random.normal(k1, (ell, d))
+    y = jax.random.normal(k2, (ell,))
+    w = jax.random.uniform(k3, (ell,), minval=0.1, maxval=1.0)
+    g = generator_matrix(k4, c, ell)
+    par = encode_client(g, w, x, y)
+    np.testing.assert_allclose(np.asarray(par.x_parity),
+                               np.asarray(g) @ np.diag(np.asarray(w)) @ np.asarray(x),
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(par.y_parity),
+                               np.asarray(g) @ (np.asarray(w) * np.asarray(y)),
+                               rtol=2e-5)
+
+
+def test_encode_fleet_is_sum_of_clients():
+    """Composite parity == implicit encoding of the full dataset (Eq. 10-12)."""
+    key = jax.random.PRNGKey(3)
+    n, ell, d, c = 5, 16, 6, 10
+    xs = jax.random.normal(key, (n, ell, d))
+    ys = jax.random.normal(jax.random.fold_in(key, 1), (n, ell))
+    ws = jnp.ones((n, ell))
+    kx = jax.random.PRNGKey(9)
+    xp, yp = encode_fleet(kx, xs, ys, ws, c)
+    assert xp.shape == (c, d) and yp.shape == (c,)
+    # manual per-client encoding with the same fold pattern
+    keys = jax.random.split(kx, n)
+    acc_x = np.zeros((c, d), dtype=np.float32)
+    acc_y = np.zeros((c,), dtype=np.float32)
+    for i in range(n):
+        g = generator_matrix(keys[i], c, ell, dtype=xs.dtype)
+        acc_x += np.asarray(g @ (ws[i][:, None] * xs[i]))
+        acc_y += np.asarray(g @ (ws[i] * ys[i]))
+    np.testing.assert_allclose(np.asarray(xp), acc_x, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(yp), acc_y, rtol=2e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 4), ell=st.integers(1, 12),
+       d=st.integers(1, 9), c=st.integers(1, 8))
+def test_encode_fleet_shapes(n, ell, d, c):
+    key = jax.random.PRNGKey(n * 1000 + ell * 100 + d * 10 + c)
+    xs = jax.random.normal(key, (n, ell, d))
+    ys = jnp.ones((n, ell))
+    ws = jnp.ones((n, ell))
+    xp, yp = encode_fleet(key, xs, ys, ws, c)
+    assert xp.shape == (c, d) and yp.shape == (c,)
+    assert np.all(np.isfinite(np.asarray(xp)))
+
+
+def test_parity_hides_raw_data():
+    """c << ell: parity rows are rank-deficient projections — a server cannot
+    reconstruct X from (X~, y~) without G (privacy argument, §III-A)."""
+    key = jax.random.PRNGKey(5)
+    ell, d, c = 64, 32, 4
+    x = jax.random.normal(key, (ell, d))
+    g = generator_matrix(jax.random.fold_in(key, 1), c, ell)
+    par = encode_client(g, jnp.ones(ell), x, jnp.zeros(ell))
+    assert np.linalg.matrix_rank(np.asarray(par.x_parity)) <= c < ell

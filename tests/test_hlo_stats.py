@@ -1,0 +1,69 @@
+"""Tests for the lightweight collective-bytes parser (launch.hlo_stats) and
+the end-to-end launch drivers' CLI paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_stats import collective_bytes, _shape_bytes
+
+
+def test_shape_bytes_simple():
+    assert _shape_bytes("bf16[4,8]{1,0}") == 4 * 8 * 2
+    assert _shape_bytes("f32[10]{0}") == 40
+    assert _shape_bytes("(f32[2,2]{1,0}, bf16[4]{0})") == 16 + 8
+    assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1
+
+
+def test_collective_bytes_counts_kinds():
+    hlo = """
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add
+  %ag.1 = bf16[4,256]{1,0} all-gather(%y), dimensions={0}
+  %a2a = f32[8,8]{1,0} all-to-all(%z), dimensions={0}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 16 * 128 * 4
+    assert out["all-gather"] == 4 * 256 * 2
+    assert out["all-to-all"] == 8 * 8 * 4
+    assert out["n_all-reduce"] == 1
+
+
+def test_collective_bytes_async_pairs_counted_once():
+    hlo = """
+  %ags = bf16[64]{0} all-gather-start(%y), dimensions={0}
+  %agd = bf16[64]{0} all-gather-done(%ags)
+"""
+    out = collective_bytes(hlo)
+    assert out.get("all-gather", 0) == 128
+    assert out.get("n_all-gather", 0) == 1
+
+
+def test_collective_bytes_empty():
+    assert collective_bytes("ENTRY %main { ROOT %c = f32[] constant(0) }") \
+        == {}
+
+
+def test_train_driver_cli_plain():
+    from repro.launch import train
+    rc = train.main(["--arch", "granite-8b", "--reduced", "--steps", "2",
+                     "--batch", "2", "--seq", "16", "--log-every", "1"])
+    assert rc == 0
+
+
+def test_train_driver_cli_federated_with_ckpt(tmp_path):
+    from repro.launch import train
+    from repro.checkpoint import latest_step
+    d = str(tmp_path / "ck")
+    rc = train.main(["--arch", "minitron-4b", "--reduced", "--steps", "2",
+                     "--batch", "4", "--seq", "16", "--federated",
+                     "--n-clients", "2", "--ckpt-dir", d,
+                     "--ckpt-every", "2"])
+    assert rc == 0
+    assert latest_step(d) == 2
+
+
+def test_serve_driver_cli():
+    from repro.launch import serve
+    rc = serve.main(["--arch", "whisper-tiny", "--reduced", "--batch", "2",
+                     "--prompt-len", "8", "--new-tokens", "2"])
+    assert rc == 0

@@ -1,0 +1,221 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (interpret mode on CPU),
+with hypothesis shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.coded_grad import ops as cg_ops
+from repro.kernels.encode import ops as en_ops
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.ssm import ssd_chunk_reference, ssd_chunked
+
+
+# ---------------------------------------------------------------------------
+# coded_grad: fused A^T(A beta - y)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,d", [(1, 1), (7, 3), (64, 8), (937, 500),
+                                 (1024, 512), (2048, 128)])
+def test_coded_grad_matches_ref(m, d):
+    key = jax.random.PRNGKey(m * 1000 + d)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jax.random.normal(k1, (m, d))
+    y = jax.random.normal(k2, (m,))
+    beta = jax.random.normal(k3, (d,))
+    got = cg_ops.lsq_gradient(a, y, beta)
+    want = cg_ops.reference(a, y, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4 * np.abs(want).max())
+
+
+@pytest.mark.parametrize("block_m", [32, 128, 1024])
+def test_coded_grad_block_sweep(block_m):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (300, 64))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (300,))
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (64,))
+    got = cg_ops.lsq_gradient(a, y, beta, block_m=block_m)
+    want = cg_ops.reference(a, y, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 200), d=st.integers(1, 64),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_coded_grad_property(m, d, dtype):
+    key = jax.random.PRNGKey(m * 100 + d)
+    a = jax.random.normal(key, (m, d), dtype=dtype)
+    y = jax.random.normal(jax.random.fold_in(key, 1), (m,), dtype=dtype)
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (d,), dtype=dtype)
+    got = cg_ops.lsq_gradient(a, y, beta, block_m=64)
+    want = cg_ops.reference(a.astype(jnp.float32), y.astype(jnp.float32),
+                            beta.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), rtol=tol,
+                               atol=tol * max(1.0, float(np.abs(want).max())))
+
+
+# ---------------------------------------------------------------------------
+# encode: fused G (W X)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,l,d", [(1, 1, 1), (17, 33, 65), (936, 300, 500),
+                                   (128, 256, 128)])
+def test_encode_matches_ref(c, l, d):
+    key = jax.random.PRNGKey(c + l + d)
+    g = jax.random.normal(key, (c, l))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (l,))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (l, d))
+    got = en_ops.encode_parity(g, w, x)
+    want = en_ops.reference(g, w, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-4 * np.abs(want).max())
+
+
+@pytest.mark.parametrize("block", [(32, 32, 32), (128, 128, 128),
+                                   (64, 128, 32)])
+def test_encode_block_sweep(block):
+    key = jax.random.PRNGKey(5)
+    g = jax.random.normal(key, (100, 70))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (70,))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (70, 50))
+    got = en_ops.encode_parity(g, w, x, block=block)
+    want = en_ops.reference(g, w, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(c=st.integers(1, 64), l=st.integers(1, 64), d=st.integers(1, 64))
+def test_encode_property(c, l, d):
+    key = jax.random.PRNGKey(c * 10000 + l * 100 + d)
+    g = jax.random.normal(key, (c, l))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (l,))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (l, d))
+    got = en_ops.encode_parity(g, w, x, block=(16, 16, 16))
+    want = en_ops.reference(g, w, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ssd: intra-chunk state-space dual kernel
+# ---------------------------------------------------------------------------
+
+def _ssd_inputs(key, B, nc, Q, H, P, N):
+    ks = jax.random.split(key, 5)
+    xc = jax.random.normal(ks[0], (B, nc, Q, H, P))
+    dtc = jax.nn.softplus(jax.random.normal(ks[1], (B, nc, Q, H)))
+    da = (-jnp.abs(jax.random.normal(ks[2], (B, nc, Q, H))) * 0.1
+          ).astype(jnp.float32)
+    bc = jax.random.normal(ks[3], (B, nc, Q, H, N))
+    cc = jax.random.normal(ks[4], (B, nc, Q, H, N))
+    return xc, dtc, da, bc, cc
+
+
+@pytest.mark.parametrize("B,nc,Q,H,P,N", [
+    (1, 1, 8, 1, 4, 4), (2, 3, 32, 4, 16, 8), (1, 2, 128, 2, 64, 32),
+])
+def test_ssd_chunk_matches_ref(B, nc, Q, H, P, N):
+    xc, dtc, da, bc, cc = _ssd_inputs(jax.random.PRNGKey(B + Q + H), B, nc,
+                                      Q, H, P, N)
+    y1, s1 = ssd_ops.ssd_chunk(xc, dtc, da, bc, cc)
+    y0, s0 = ssd_chunk_reference(xc, dtc, da, bc, cc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=1e-4,
+                               atol=1e-4 * max(1.0, float(np.abs(y0).max())))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), rtol=1e-4,
+                               atol=1e-4 * max(1.0, float(np.abs(s0).max())))
+
+
+def test_ssd_chunked_with_kernel_end_to_end():
+    """ssd_chunked(use_kernel=True) == ssd_chunked(use_kernel=False)."""
+    key = jax.random.PRNGKey(7)
+    B, S, H, P, G, N = 2, 64, 4, 8, 2, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    b = jax.random.normal(ks[3], (B, S, G, N))
+    c = jax.random.normal(ks[4], (B, S, G, N))
+    y0, h0 = ssd_chunked(x, dt, a, b, c, chunk=16, use_kernel=False)
+    y1, h1 = ssd_chunked(x, dt, a, b, c, chunk=16, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0), rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(Q=st.sampled_from([8, 16, 32]), H=st.integers(1, 3),
+       P=st.sampled_from([4, 8]), N=st.sampled_from([4, 8]))
+def test_ssd_property(Q, H, P, N):
+    xc, dtc, da, bc, cc = _ssd_inputs(jax.random.PRNGKey(Q * H + P + N),
+                                      1, 2, Q, H, P, N)
+    y1, s1 = ssd_ops.ssd_chunk(xc, dtc, da, bc, cc)
+    y0, s0 = ssd_chunk_reference(xc, dtc, da, bc, cc)
+    assert np.all(np.isfinite(np.asarray(y1)))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), rtol=1e-4,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash_attn: causal online-softmax attention
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attn import ops as fa_ops
+
+
+@pytest.mark.parametrize("B,H,S,D,bq,bk", [
+    (1, 2, 64, 16, 16, 16), (2, 4, 128, 32, 32, 64), (1, 1, 256, 64, 64, 64),
+    (1, 2, 96, 16, 32, 48),
+])
+def test_flash_attn_matches_ref(B, H, S, D, bq, bk):
+    key = jax.random.PRNGKey(B + H + S)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    out = fa_ops.causal_attention(q, k, v, block_q=bq, block_k=bk)
+    want = fa_ops.reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attn_bf16():
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 32), dtype=jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 64, 32), dtype=jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 64, 32), dtype=jnp.bfloat16)
+    out = fa_ops.causal_attention(q, k, v, block_q=32, block_k=32)
+    want = fa_ops.reference(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attn_rejects_non_divisible():
+    q = jnp.zeros((1, 1, 100, 16))
+    with pytest.raises(ValueError):
+        fa_ops.causal_attention(q, q, q, block_q=64, block_k=64)
+
+
+@settings(max_examples=6, deadline=None)
+@given(S=st.sampled_from([32, 64, 128]), D=st.sampled_from([8, 16]),
+       bq=st.sampled_from([16, 32]))
+def test_flash_attn_property(S, D, bq):
+    key = jax.random.PRNGKey(S * D)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, S, D))
+    k = jax.random.normal(ks[1], (1, 2, S, D))
+    v = jax.random.normal(ks[2], (1, 2, S, D))
+    out = fa_ops.causal_attention(q, k, v, block_q=bq, block_k=bq)
+    want = fa_ops.reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,135 @@
+"""Tests for the HLO-graph roofline parser (trip-count correction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_graph import module_stats, parse_computations
+from repro.roofline.analysis import active_params, dominant_term, model_flops
+
+
+def _compile(f, *sds):
+    return jax.jit(f).lower(*sds).compile().as_text()
+
+
+def test_scan_trip_count_correction():
+    def f(x, ws):
+        def step(c, w):
+            return c @ w, None
+        return jax.lax.scan(step, x, ws)[0]
+
+    hlo = _compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                   jax.ShapeDtypeStruct((9, 64, 64), jnp.float32))
+    st = module_stats(hlo)
+    np.testing.assert_allclose(st["flops"], 9 * 2 * 64 ** 3, rtol=1e-6)
+
+
+def test_nested_scan():
+    def g(x, ws):
+        def outer(c, grp):
+            def inner(cc, w):
+                return cc @ w, None
+            return jax.lax.scan(inner, c, grp)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    hlo = _compile(g, jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                   jax.ShapeDtypeStruct((4, 6, 32, 32), jnp.float32))
+    st = module_stats(hlo)
+    np.testing.assert_allclose(st["flops"], 24 * 2 * 32 ** 3, rtol=1e-6)
+
+
+def test_grad_counts_fwd_and_bwd():
+    def f(x, ws):
+        def step(c, w):
+            return c @ w, None
+        return jnp.sum(jax.lax.scan(step, x, ws)[0])
+
+    hlo = _compile(jax.grad(f, argnums=1),
+                   jax.ShapeDtypeStruct((48, 48), jnp.float32),
+                   jax.ShapeDtypeStruct((5, 48, 48), jnp.float32))
+    st = module_stats(hlo)
+    # fwd (1x) + bwd (2x) matmuls
+    np.testing.assert_allclose(st["flops"], 3 * 5 * 2 * 48 ** 3, rtol=1e-6)
+
+
+def test_plain_matmul_no_loop():
+    def f(a, b):
+        return a @ b
+
+    hlo = _compile(f, jax.ShapeDtypeStruct((128, 64), jnp.float32),
+                   jax.ShapeDtypeStruct((64, 32), jnp.float32))
+    st = module_stats(hlo)
+    np.testing.assert_allclose(st["flops"], 2 * 128 * 64 * 32, rtol=1e-6)
+
+
+def test_bytes_positive_and_finite():
+    def f(a, b):
+        return jnp.tanh(a @ b)
+
+    hlo = _compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                   jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    st = module_stats(hlo)
+    assert st["bytes"] > 0 and np.isfinite(st["bytes"])
+
+
+def test_parse_computations_handles_tuple_types():
+    def f(x, ws):
+        def step(c, w):
+            return c @ w, c
+        return jax.lax.scan(step, x, ws)
+
+    hlo = _compile(f, jax.ShapeDtypeStruct((16, 16), jnp.float32),
+                   jax.ShapeDtypeStruct((3, 16, 16), jnp.float32))
+    comps = parse_computations(hlo)
+    assert len(comps) >= 2  # entry + while body/cond at least
+    ops = {i.op for instrs in comps.values() for i in instrs}
+    assert "while" in ops and "dot" in ops
+
+
+def test_model_flops_moe_counts_active_only():
+    from repro.configs import get_config
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    n_act = active_params(moe)
+    # ~6.6B active (paper card); allow generous band
+    assert 4e9 < n_act < 9e9
+    dense_equiv = 16 / 2 * n_act  # all-expert count would be much larger
+    total_moe_mlp = 32 * 16 * 3 * 4096 * 6400
+    assert n_act < total_moe_mlp  # sanity: active << total
+
+
+def test_model_flops_shapes():
+    from repro.configs import get_config
+    cfg = get_config("granite-8b")
+    t = model_flops(cfg, "train_4k")
+    p = model_flops(cfg, "prefill_32k")
+    d = model_flops(cfg, "decode_32k")
+    assert t > p > d
+    # train: 6*N*D vs prefill 2*N*D with equal token counts => ratio 3
+    np.testing.assert_allclose(t / p, 3.0, rtol=1e-6)
+
+
+def test_dominant_term():
+    assert dominant_term({"t_compute": 3.0, "t_memory": 1.0,
+                          "t_collective": 2.0}) == "compute"
+    assert dominant_term({"t_compute": 0.0, "t_memory": 1.0,
+                          "t_collective": 2.0}) == "collective"
+
+
+def test_collectives_detected_under_mesh():
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    devs = jax.devices()
+    if len(devs) < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def f(x):
+        return jax.lax.with_sharding_constraint(
+            x.sum(axis=0, keepdims=True), NamedSharding(mesh, P()))
+
+    # trivial mesh: may or may not emit collectives; just verify parser
+    # doesn't crash on sharded modules
+    with mesh:
+        hlo = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile().as_text()
+    st = module_stats(hlo)
+    assert "collectives" in st

@@ -1,0 +1,58 @@
+"""Tests for LR schedules, gradient clipping, and the multi-host bootstrap's
+single-process paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.distributed import (initialize_distributed, is_coordinator,
+                                      sync_hosts, validate_mesh_capacity)
+from repro.optim.schedules import (clip_by_global_norm, constant,
+                                   cosine_with_warmup, global_norm)
+
+
+def test_constant_schedule():
+    s = constant(3e-4)
+    assert float(s(0)) == pytest.approx(3e-4)
+    assert float(s(10_000)) == pytest.approx(3e-4)
+
+
+def test_cosine_with_warmup_shape():
+    s = cosine_with_warmup(1.0, warmup_steps=10, total_steps=110,
+                           final_frac=0.1)
+    assert float(s(0)) == 0.0
+    assert float(s(5)) == pytest.approx(0.5)
+    assert float(s(10)) == pytest.approx(1.0, abs=1e-6)
+    mid = float(s(60))
+    assert 0.1 < mid < 1.0
+    assert float(s(110)) == pytest.approx(0.1, abs=1e-6)
+    # monotone decay after warmup
+    vals = [float(s(t)) for t in range(10, 111, 10)]
+    assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+def test_global_norm_and_clip():
+    g = {"a": jnp.ones(4) * 3.0, "b": jnp.ones(9) * 4.0}
+    n = float(global_norm(g))
+    assert n == pytest.approx(np.sqrt(4 * 9 + 9 * 16))
+    clipped, pre = clip_by_global_norm(g, max_norm=1.0)
+    assert float(pre) == pytest.approx(n)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # under the threshold: unchanged
+    small = {"a": jnp.ones(2) * 0.1}
+    same, _ = clip_by_global_norm(small, max_norm=10.0)
+    np.testing.assert_allclose(np.asarray(same["a"]),
+                               np.asarray(small["a"]), rtol=1e-6)
+
+
+def test_distributed_noop_without_cluster_env(monkeypatch):
+    monkeypatch.delenv("COORDINATOR_ADDRESS", raising=False)
+    monkeypatch.delenv("JAX_PLATFORMS", raising=False)
+    assert initialize_distributed() is False
+    assert is_coordinator()
+    sync_hosts()  # no-op single process
+
+
+def test_validate_mesh_capacity_raises_on_host():
+    with pytest.raises(RuntimeError):
+        validate_mesh_capacity()  # host has 1 device, mesh wants 256

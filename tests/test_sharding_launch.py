@@ -1,0 +1,163 @@
+"""Tests for the sharding rules, mesh helpers, and a miniature end-to-end
+sharded lower+compile on the host mesh (1 device) — the same code path the
+512-device dry-run exercises."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, input_specs
+from repro.launch import sharding as SH
+from repro.launch.mesh import data_axes, make_host_mesh
+from repro.launch.steps import make_decode_step, make_train_step
+from repro.models import transformer as T
+from repro.optim.optimizers import make_optimizer
+
+# lock the device count BEFORE any test imports repro.launch.dryrun (which
+# sets xla_force_host_platform_device_count=512 for the real dry-run)
+_ = jax.devices()
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(model_axis=1)
+
+
+def _specs(cfg, mesh, fsdp=False):
+    params = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    sh = SH.param_shardings(cfg, mesh, params, fsdp=fsdp)
+    return params, sh
+
+
+def test_param_rules_dense(mesh):
+    cfg = get_config("granite-8b")
+    params, sh = _specs(cfg, mesh)
+    # embed sharded over model on vocab; wq over model on out dim
+    assert sh["embed"].spec == P("model", None)
+    assert sh["blocks"]["attn"]["wq"].spec == P(None, None, "model")
+    assert sh["blocks"]["attn"]["wo"].spec == P(None, "model", None)
+    assert sh["blocks"]["mlp"]["w_down"].spec == P(None, "model", None)
+    # norms replicated
+    assert sh["blocks"]["attn_norm"]["scale"].spec == P(None, None)
+
+
+def test_param_rules_moe_expert_parallel(mesh):
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    params, sh = _specs(cfg, mesh, fsdp=True)
+    # experts over model; FSDP over data on the D dim
+    assert sh["moe_blocks"]["moe"]["w_gate"].spec[1] == "model"
+    assert sh["moe_blocks"]["moe"]["w_gate"].spec[2] == "data"
+    assert sh["moe_blocks"]["moe"]["router"].spec == P(None, None, None)
+
+
+def test_param_rules_mamba(mesh):
+    cfg = get_config("mamba2-1.3b")
+    params, sh = _specs(cfg, mesh, fsdp=False)
+    # no-FSDP: mamba weights replicated (packed boundaries, DESIGN.md 6b.3)
+    assert sh["blocks"]["mixer"]["w_in"].spec == P(None, None, None)
+    params, sh = _specs(cfg, mesh, fsdp=True)
+    assert sh["blocks"]["mixer"]["w_in"].spec[1] == "data"
+
+
+def test_divisibility_guard(mesh):
+    """Dims that don't divide the axis fall back to replication."""
+    cfg = get_config("whisper-tiny")  # 6 heads, hd 64 -> 384-dim projections
+    params, sh = _specs(cfg, mesh)
+    for leaf_sh in jax.tree.leaves(sh):
+        assert leaf_sh is not None  # every leaf got a sharding
+
+
+def test_batch_shardings(mesh):
+    cfg = get_config("granite-8b")
+    b = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+         "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    sh = SH.batch_shardings(cfg, mesh, b)
+    assert sh["tokens"].spec[0] is not None  # batch over data axes
+    assert sh["pos"].spec == P()
+
+
+def test_cache_shardings_kv_and_ssm(mesh):
+    dense = get_config("codeqwen1.5-7b")
+    cache = jax.eval_shape(lambda: T.init_cache(dense, 4, 32))
+    sh = SH.cache_shardings(dense, mesh, cache)
+    assert len(sh["attn"]["k"].spec) == 5
+    ssm = get_config("mamba2-1.3b")
+    cache = jax.eval_shape(lambda: T.init_cache(ssm, 4, 32))
+    sh = SH.cache_shardings(ssm, mesh, cache)
+    assert len(sh["mamba"]["ssm"].spec) == 5
+
+
+def test_zero1_shards_moments_of_replicated_params(mesh):
+    cfg = get_config("mamba2-1.3b")
+    params = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    p_sh = SH.param_shardings(cfg, mesh, params, fsdp=False)
+    opt = make_optimizer("adamw", 1e-3)
+    opt_sds = jax.eval_shape(opt.init, params)
+    o_sh = SH.opt_state_shardings(mesh, p_sh, opt_sds, zero1=True)
+    # the stacked (48, ...) w_in moment gets its L dim data-sharded
+    spec = o_sh.mu["blocks"]["mixer"]["w_in"].spec
+    assert "data" in spec
+
+
+def test_mini_sharded_train_step_compiles_and_runs(mesh):
+    """End-to-end: jit with shardings on the host mesh, real execution."""
+    cfg = get_config("granite-8b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    p_sh = SH.param_shardings(cfg, mesh, jax.eval_shape(lambda: params))
+    opt = make_optimizer("adamw", 1e-3)
+    opt_state = opt.init(params)
+    o_sh = SH.opt_state_shardings(mesh, p_sh,
+                                  jax.eval_shape(lambda: opt_state))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "targets": jnp.ones((2, 16), jnp.int32)}
+    b_sh = SH.batch_shardings(cfg, mesh, jax.eval_shape(lambda: batch))
+    step = jax.jit(make_train_step(cfg, opt, compute_dtype=jnp.float32,
+                                   remat=False),
+                   in_shardings=(p_sh, o_sh, b_sh))
+    with mesh:
+        params2, opt2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_mini_sharded_decode_step(mesh):
+    cfg = get_config("zamba2-1.2b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    cache = T.init_cache(cfg, 2, 32)
+    c_sh = SH.cache_shardings(cfg, mesh, jax.eval_shape(lambda: cache))
+    step = jax.jit(make_decode_step(cfg, compute_dtype=jnp.float32))
+    with mesh:
+        logits, cache2 = step(params,
+                              {"token": jnp.ones((2, 1), jnp.int32),
+                               "pos": jnp.asarray(0, jnp.int32)}, cache)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_data_axes():
+    m1 = make_host_mesh(model_axis=1)
+    assert data_axes(m1) == ("data",)
+
+
+def test_base_arch_name():
+    assert SH.base_arch_name("granite-8b-sw8192") == "granite-8b"
+    assert SH.base_arch_name("mamba2-1.3b") == "mamba2-1.3b"
+
+
+def test_optimize_config_shape_aware():
+    from repro.launch.dryrun import optimize_config
+    dense = get_config("granite-8b")
+    t = optimize_config(dense, "train")
+    d = optimize_config(dense, "decode")
+    assert t.attn_impl == "repeat" and t.softmax_dtype == "bf16"
+    assert d.attn_impl == "grouped"  # repeat regresses decode (§Perf)
+    llama4 = optimize_config(get_config("llama4-maverick-400b-a17b"),
+                             "train")
+    assert llama4.attn_seq_shard == "head"      # 40 heads % 16 != 0
+    assert llama4.moe.capacity_factor == 1.25
+    mamba = optimize_config(get_config("mamba2-1.3b"), "decode")
+    assert mamba.ssm.head_shard

@@ -1,0 +1,251 @@
+"""Tests for the substrate: optimizers, checkpointing, data partitioning,
+federated trainer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.partition import partition_iid, partition_noniid
+from repro.data.synthetic import token_batches
+from repro.optim.optimizers import (adamw, apply_updates, make_optimizer,
+                                    sgd)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": jnp.array([1.5])}
+
+
+def _quadratic_grads(params):
+    return jax.grad(
+        lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2))(params)
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.05, momentum=0.9),
+                                 adamw(0.3)])
+def test_optimizers_minimize_quadratic(opt):
+    params = _quadratic_params()
+    state = opt.init(params)
+    for _ in range(200):
+        grads = _quadratic_grads(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    norm = sum(float(jnp.sum(jnp.abs(v))) for v in jax.tree.leaves(params))
+    assert norm < 0.15
+
+
+def test_adamw_bf16_states():
+    opt = adamw(1e-2, state_dtype=jnp.bfloat16)
+    params = _quadratic_params()
+    state = opt.init(params)
+    assert all(m.dtype == jnp.bfloat16 for m in jax.tree.leaves(state.mu))
+    grads = _quadratic_grads(params)
+    updates, state = opt.update(grads, state, params)
+    assert all(bool(jnp.all(jnp.isfinite(u)))
+               for u in jax.tree.leaves(updates))
+
+
+def test_weight_decay_shrinks_params():
+    opt = adamw(1e-2, weight_decay=0.5)
+    params = {"w": jnp.ones(4)}
+    state = opt.init(params)
+    zero_grads = {"w": jnp.zeros(4)}
+    p = params
+    for _ in range(10):
+        updates, state = opt.update(zero_grads, state, p)
+        p = apply_updates(p, updates)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 1.0
+
+
+def test_make_optimizer_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_optimizer("lion", 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": jnp.asarray(3, jnp.int32)}}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, tree)
+    save_checkpoint(d, 12, tree)
+    assert latest_step(d) == 12
+    step, restored = restore_checkpoint(d, template=tree)
+    assert step == 12
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"a": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, template={"a": jnp.ones((3, 3))})
+
+
+def test_checkpoint_missing_leaf_rejected(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"a": jnp.ones(2)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(d, template={"a": jnp.ones(2), "b": jnp.ones(2)})
+
+
+def test_checkpoint_no_dir():
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint("/nonexistent/dir")
+
+
+# ---------------------------------------------------------------------------
+# partitioning
+# ---------------------------------------------------------------------------
+
+def test_partition_iid_covers_everything():
+    rng = np.random.default_rng(0)
+    parts = partition_iid(103, 7, rng)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 103
+    assert len(np.unique(allidx)) == 103
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_clients=st.integers(2, 10), alpha=st.floats(0.05, 10.0))
+def test_partition_noniid_covers_everything(n_clients, alpha):
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 5, size=200)
+    parts = partition_noniid(labels, n_clients, alpha, rng)
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(allidx) == 200
+    assert len(np.unique(allidx)) == 200
+
+
+def test_partition_noniid_skew_increases_as_alpha_drops():
+    rng = np.random.default_rng(2)
+    labels = rng.integers(0, 10, size=5000)
+
+    def skew(alpha):
+        parts = partition_noniid(labels, 8, alpha, np.random.default_rng(3))
+        # mean per-client label entropy (lower = more skewed)
+        ents = []
+        for p in parts:
+            if len(p) == 0:
+                continue
+            _, counts = np.unique(labels[p], return_counts=True)
+            q = counts / counts.sum()
+            ents.append(-(q * np.log(q)).sum())
+        return np.mean(ents)
+
+    assert skew(0.05) < skew(100.0)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_token_batches_shapes_and_range():
+    it = token_batches(0, batch=4, seq_len=32, vocab=100)
+    b = next(it)
+    assert b["tokens"].shape == (4, 32) and b["targets"].shape == (4, 32)
+    assert int(b["tokens"].max()) < 100 and int(b["tokens"].min()) >= 0
+    # targets are next-token shifted
+    b2 = next(it)
+    assert b2["tokens"].shape == (4, 32)
+
+
+# ---------------------------------------------------------------------------
+# federated trainer
+# ---------------------------------------------------------------------------
+
+def test_fed_setup_and_round():
+    from repro.fed import FedConfig, fed_setup
+    from repro.fed.trainer import round_weights
+    from repro.sim.network import paper_fleet
+
+    fleet = paper_fleet(0.2, 0.2, seed=0, n=8, d=100)
+    cfg = FedConfig(n_clients=8, sequences_per_client=16,
+                    target_sequences=64)
+    state = fed_setup(fleet.edge, cfg)
+    assert state.plan.t_star > 0
+    assert state.plan.loads.sum() >= 0
+    assert np.all(state.plan.loads <= 16)
+    # expected return covers the target
+    assert state.plan.expected_agg >= 64 * 0.999
+
+    rng = np.random.default_rng(0)
+    batch_clients = np.repeat(np.arange(8), 4)
+    w, dt = round_weights(state, rng, batch_clients)
+    assert w.shape == (32,)
+    assert dt == pytest.approx(state.plan.t_star)
+    # weights are 0 (dropped) or 1/p (importance-scaled)
+    nz = w[w > 0]
+    assert np.all(nz >= 1.0)
+
+
+def test_fed_round_unbiasedness():
+    """E[masked weighted sum] == plain sum over many arrival draws."""
+    from repro.fed import FedConfig, fed_setup
+    from repro.fed.trainer import round_weights
+    from repro.sim.network import paper_fleet
+
+    fleet = paper_fleet(0.3, 0.3, seed=1, n=6, d=50)
+    cfg = FedConfig(n_clients=6, sequences_per_client=8, target_sequences=24)
+    state = fed_setup(fleet.edge, cfg)
+    rng = np.random.default_rng(1)
+    batch_clients = np.repeat(np.arange(6), 2)
+    vals = np.arange(12, dtype=np.float64) + 1.0
+    est = np.zeros(12)
+    trials = 4000
+    for _ in range(trials):
+        w, _ = round_weights(state, rng, batch_clients)
+        est += w * vals
+    est /= trials
+    # sequences from scheduled clients (load > 0) must be unbiased
+    scheduled = state.plan.loads[batch_clients] > 0
+    np.testing.assert_allclose(est[scheduled], vals[scheduled], rtol=0.12)
+
+
+def test_fed_lm_training_reduces_loss():
+    from repro.configs import get_config
+    from repro.fed import FedConfig, fed_setup
+    from repro.fed.trainer import round_weights
+    from repro.launch.steps import make_fed_train_step
+    from repro.models import transformer as T
+    from repro.optim.optimizers import make_optimizer
+    from repro.sim.network import paper_fleet
+
+    cfg = get_config("granite-8b").reduced()
+    n_clients, per_client = 4, 2
+    B = n_clients * per_client
+    fleet = paper_fleet(0.1, 0.1, seed=0, n=n_clients, d=64)
+    fcfg = FedConfig(n_clients=n_clients, sequences_per_client=per_client,
+                     target_sequences=B)
+    state = fed_setup(fleet.edge, fcfg)
+
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", 3e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_fed_train_step(cfg, opt))
+    from repro.data.synthetic import token_batches
+    it = token_batches(0, batch=B, seq_len=16, vocab=cfg.vocab)
+    rng = np.random.default_rng(0)
+    batch_clients = np.repeat(np.arange(n_clients), per_client)
+    losses = []
+    batch = next(it)
+    for r in range(10):
+        w, _ = round_weights(state, rng, batch_clients)
+        params, opt_state, m = step(params, opt_state, batch,
+                                    jnp.asarray(w, jnp.float32))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
