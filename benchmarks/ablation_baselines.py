@@ -1,44 +1,52 @@
 """Ablation: CFL vs uncoded FL vs gradient coding (paper ref [5]) at the
-§IV setting — the three-way comparison the paper motivates in §I."""
+§IV setting — the three-way comparison the paper motivates in §I, plus the
+`server_always_returns` ablation.  Every arm is one `Session` configuration
+over the same data; gradient coding runs through the same engine as CFL
+instead of a bespoke script loop.
+"""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from repro.core.gradient_coding import run_gradient_coding
-from repro.sim import simulator as S
+from repro.api import GradientCodingFL, Session, convergence_time
 from repro.sim.network import paper_fleet
-from repro.sim.simulator import convergence_time
 
-from .common import LR, M, Timer, emit, problem
+from .common import LR, Timer, cfl_session, emit, problem, uncoded_session
 
 TARGET = 1e-3
 
 
 def main(epochs: int = 1000, nu: float = 0.2) -> None:
-    xs, ys, beta_true = problem(0)
+    data = problem(0)
     fleet = paper_fleet(nu, nu, seed=0)
 
     with Timer() as t:
-        res_u = S.run_uncoded(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
-                              rng=np.random.default_rng(0))
+        res_u = uncoded_session(fleet, epochs).run(
+            data, rng=np.random.default_rng(0))
     tu = convergence_time(res_u, TARGET)
     emit("ablation/uncoded", t.us / epochs, f"t_conv={tu:.0f}s")
 
     with Timer() as t:
-        res_c = S.run_cfl(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
-                          rng=np.random.default_rng(0),
-                          key=jax.random.PRNGKey(7), fixed_c=int(0.28 * M),
-                          include_upload_delay=False)
+        res_c = cfl_session(fleet, epochs, delta=0.28).run(
+            data, rng=np.random.default_rng(0))
     tc = convergence_time(res_c, TARGET)
     emit("ablation/cfl_delta=0.28", t.us / epochs,
          f"t_conv={tc:.0f}s;gain_vs_uncoded={tu/tc:.2f}")
 
+    # ablation: the server's parity gradient always lands by the deadline
+    with Timer() as t:
+        res_s = cfl_session(fleet, epochs, delta=0.28,
+                            server_always_returns=True).run(
+            data, rng=np.random.default_rng(0))
+    ts = convergence_time(res_s, TARGET)
+    emit("ablation/cfl_server_always_returns", t.us / epochs,
+         f"t_conv={ts:.0f}s;gain_vs_uncoded={tu/ts:.2f}")
+
     for r in (2, 3):
         with Timer() as t:
-            res_g = run_gradient_coding(fleet, xs, ys, beta_true, lr=LR,
-                                        epochs=epochs,
-                                        rng=np.random.default_rng(0), r=r)
+            res_g = Session(strategy=GradientCodingFL(r=r), fleet=fleet,
+                            lr=LR, epochs=epochs).run(
+                data, rng=np.random.default_rng(0))
         tg = convergence_time(res_g, TARGET)
         emit(f"ablation/gradcode_r={r}", t.us / epochs,
              f"t_conv={tg:.0f}s;gain_vs_uncoded={tu/tg:.2f};"

@@ -1,13 +1,15 @@
-"""Shared setup for the paper-figure benchmarks (§IV configuration)."""
+"""Shared setup for the paper-figure benchmarks (§IV configuration).
+
+All training benchmarks run through the unified Strategy/Session API
+(`repro.api`): each figure is a set of `Session` configurations over the
+same `TrainData`, executed by the single scan-jitted epoch engine.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
-import numpy as np
-
-from repro.sim import simulator as S
-from repro.sim.network import paper_fleet
+from repro.api import CodedFL, Session, TrainData, UncodedFL
 
 N_DEVICES = 24
 ELL = 300
@@ -17,26 +19,25 @@ M = N_DEVICES * ELL
 TARGET_NMSE = 3e-4  # paper Fig. 4 convergence criterion
 
 
-def problem(seed: int = 0):
-    key = jax.random.PRNGKey(seed)
-    return S.generate_linreg(key, N_DEVICES, ELL, D)
+def problem(seed: int = 0) -> TrainData:
+    return TrainData.linreg(jax.random.PRNGKey(seed),
+                            n=N_DEVICES, ell=ELL, d=D)
 
 
-def run_pair(nu_comp: float, nu_link: float, delta: float, epochs: int,
-             seed: int = 0, include_upload_delay: bool = False,
-             xs=None, ys=None, beta_true=None):
-    """One (uncoded, coded) run pair sharing the same fleet + data."""
-    fleet = paper_fleet(nu_comp, nu_link, seed=seed)
-    if xs is None:
-        xs, ys, beta_true = problem(seed)
-    res_u = S.run_uncoded(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
-                          rng=np.random.default_rng(seed))
-    res_c = S.run_cfl(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
-                      rng=np.random.default_rng(seed),
-                      key=jax.random.PRNGKey(seed + 100),
-                      fixed_c=int(delta * M),
-                      include_upload_delay=include_upload_delay)
-    return fleet, res_u, res_c
+def uncoded_session(fleet, epochs: int) -> Session:
+    return Session(strategy=UncodedFL(), fleet=fleet, lr=LR, epochs=epochs)
+
+
+def cfl_session(fleet, epochs: int, delta: float,
+                include_upload_delay: bool = False,
+                server_always_returns: bool = False,
+                key_seed: int = 7) -> Session:
+    strategy = CodedFL(key=jax.random.PRNGKey(key_seed),
+                       fixed_c=int(delta * M),
+                       include_upload_delay=include_upload_delay,
+                       server_always_returns=server_always_returns,
+                       label=f"cfl_delta={delta}")
+    return Session(strategy=strategy, fleet=fleet, lr=LR, epochs=epochs)
 
 
 class Timer:

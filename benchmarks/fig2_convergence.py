@@ -1,49 +1,50 @@
 """Paper Fig. 2: NMSE-vs-wall-clock convergence for a redundancy sweep at
-heterogeneity (0.2, 0.2), benchmarked against the least-squares bound."""
+heterogeneity (0.2, 0.2), benchmarked against the least-squares bound.
+
+Each curve is one `Session` run: uncoded FL plus a fixed-`c` sweep of
+`CodedFL` strategies over the same data and delay seed.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.sim import simulator as S
+from repro.api import TrainData, convergence_time
 from repro.sim.network import paper_fleet
-from repro.sim.simulator import convergence_time
 
-from .common import D, ELL, LR, M, N_DEVICES, Timer, emit, problem
+from .common import D, Timer, cfl_session, emit, problem, uncoded_session
 
 
-def ls_bound(xs, ys, beta_true) -> float:
+def ls_bound(data: TrainData) -> float:
     """NMSE of the closed-form least-squares estimator (the paper's bound)."""
-    x = np.asarray(xs).reshape(-1, D)
-    y = np.asarray(ys).reshape(-1)
+    x = np.asarray(data.xs).reshape(-1, D)
+    y = np.asarray(data.ys).reshape(-1)
     bhat, *_ = np.linalg.lstsq(x, y, rcond=None)
-    bt = np.asarray(beta_true)
+    bt = np.asarray(data.beta_true)
     return float(np.sum((bhat - bt) ** 2) / np.sum(bt ** 2))
 
 
 def main(epochs: int = 1200, deltas=(0.0, 0.07, 0.13, 0.16, 0.28)) -> None:
-    xs, ys, beta_true = problem(0)
+    data = problem(0)
     fleet = paper_fleet(0.2, 0.2, seed=0)
-    bound = ls_bound(xs, ys, beta_true)
+    bound = ls_bound(data)
     emit("fig2/ls_bound_nmse", 0.0, f"nmse={bound:.3e}")
 
     with Timer() as t:
-        res_u = S.run_uncoded(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
-                              rng=np.random.default_rng(0))
+        res_u = uncoded_session(fleet, epochs).run(
+            data, rng=np.random.default_rng(0))
     emit("fig2/uncoded", t.us / epochs,
          f"final_nmse={res_u.final_nmse():.3e};"
          f"t_conv_1e-3={convergence_time(res_u, 1e-3):.0f}s;"
          f"t_conv_3e-4={convergence_time(res_u, 3e-4):.0f}s")
 
-    import jax
     for delta in deltas:
         if delta == 0.0:
             continue
         with Timer() as t:
-            res_c = S.run_cfl(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
-                              rng=np.random.default_rng(0),
-                              key=jax.random.PRNGKey(100),
-                              fixed_c=int(delta * M),
-                              include_upload_delay=True)
+            res_c = cfl_session(fleet, epochs, delta,
+                                include_upload_delay=True,
+                                key_seed=100).run(
+                data, rng=np.random.default_rng(0))
         emit(f"fig2/cfl_delta={delta}", t.us / epochs,
              f"t_star={res_c.epoch_durations[0]:.2f}s;"
              f"setup={res_c.setup_time:.0f}s;"

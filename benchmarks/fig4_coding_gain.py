@@ -1,38 +1,39 @@
 """Paper Fig. 4: coding gain (uncoded/coded convergence-time ratio to
-NMSE <= 3e-4) across heterogeneity levels, at the per-level optimal delta."""
+NMSE <= 3e-4) across heterogeneity levels, at the per-level optimal delta.
+
+One uncoded `Session` per heterogeneity level plus a delta sweep of
+`CodedFL` sessions — the engine is traced once per level and reused across
+the sweep (same shapes, same static structure).
+"""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from repro.sim import simulator as S
+from repro.api import coding_gain, convergence_time
 from repro.sim.network import paper_fleet
-from repro.sim.simulator import coding_gain, convergence_time
 
-from .common import LR, M, TARGET_NMSE, Timer, emit, problem
+from .common import TARGET_NMSE, Timer, cfl_session, emit, problem, \
+    uncoded_session
 
 
 def main(epochs: int = 1400,
          levels=((0.0, 0.0), (0.1, 0.1), (0.2, 0.2)),
          deltas=(0.07, 0.13, 0.28, 0.4, 0.5)) -> None:
-    xs, ys, beta_true = problem(0)
+    data = problem(0)
     for nu_c, nu_l in levels:
         fleet = paper_fleet(nu_c, nu_l, seed=0)
         with Timer() as t:
-            res_u = S.run_uncoded(fleet, xs, ys, beta_true, lr=LR,
-                                  epochs=epochs, rng=np.random.default_rng(0))
+            res_u = uncoded_session(fleet, epochs).run(
+                data, rng=np.random.default_rng(0))
             best_gain, best_delta = -np.inf, None
             for delta in deltas:
-                res_c = S.run_cfl(fleet, xs, ys, beta_true, lr=LR,
-                                  epochs=epochs,
-                                  rng=np.random.default_rng(0),
-                                  key=jax.random.PRNGKey(7),
-                                  fixed_c=int(delta * M),
-                                  include_upload_delay=False)
+                res_c = cfl_session(fleet, epochs, delta).run(
+                    data, rng=np.random.default_rng(0))
                 g = coding_gain(res_u, res_c, TARGET_NMSE)
                 if np.isfinite(g) and g > best_gain:
                     best_gain, best_delta = g, delta
-        emit(f"fig4/gain_nu=({nu_c},{nu_l})", t.us / (epochs * (len(deltas) + 1)),
+        emit(f"fig4/gain_nu=({nu_c},{nu_l})",
+             t.us / (epochs * (len(deltas) + 1)),
              f"best_gain={best_gain:.2f};best_delta={best_delta};"
              f"t_conv_uncoded={convergence_time(res_u, TARGET_NMSE):.0f}s")
 

@@ -1,45 +1,48 @@
 """Paper Fig. 5: coding gain vs communication load across a delta sweep at
-heterogeneity (0.4, 0.4) — more parity converges faster but ships more bits."""
+heterogeneity (0.4, 0.4) — more parity converges faster but ships more bits.
+
+Migrated to the Session API: the uplink accounting comes straight from each
+strategy's `uplink_bits` (via `TraceReport.uplink_bits_total`) prorated to
+the convergence epoch.
+"""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from repro.sim import simulator as S
+from repro.api import coding_gain, convergence_time
 from repro.sim.network import paper_fleet
-from repro.sim.simulator import coding_gain, convergence_time
 
-from .common import LR, M, Timer, emit, problem
+from .common import N_DEVICES, Timer, cfl_session, emit, problem, \
+    uncoded_session
 
 TARGET = 1.8e-4  # the paper's Fig.-5 target NMSE
 
 
 def main(epochs: int = 1600, deltas=(0.07, 0.13, 0.16, 0.28, 0.4),
          nu: float = 0.4) -> None:
-    xs, ys, beta_true = problem(0)
+    data = problem(0)
     fleet = paper_fleet(nu, nu, seed=0)
+    per_epoch_bits = N_DEVICES * 2 * fleet.packet_bits  # model down + grad up
     with Timer() as t:
-        res_u = S.run_uncoded(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
-                              rng=np.random.default_rng(0))
+        res_u = uncoded_session(fleet, epochs).run(
+            data, rng=np.random.default_rng(0))
     t_u = convergence_time(res_u, TARGET)
     # communication up to the convergence point only
     epochs_to_conv = int(np.searchsorted(res_u.times, t_u))
-    bits_u = epochs_to_conv * 24 * 2 * fleet.packet_bits
+    bits_u = epochs_to_conv * per_epoch_bits
     emit("fig5/uncoded", t.us / epochs, f"t_conv={t_u:.0f}s;bits={bits_u:.3e}")
 
     for delta in deltas:
         with Timer() as t:
-            res_c = S.run_cfl(fleet, xs, ys, beta_true, lr=LR, epochs=epochs,
-                              rng=np.random.default_rng(0),
-                              key=jax.random.PRNGKey(7),
-                              fixed_c=int(delta * M),
-                              include_upload_delay=False)
+            res_c = cfl_session(fleet, epochs, delta).run(
+                data, rng=np.random.default_rng(0))
         g = coding_gain(res_u, res_c, TARGET)
         t_c = convergence_time(res_c, TARGET)
         ep_c = int(np.searchsorted(res_c.times, t_c))
-        # every device ships c rows of (d+1) floats (+10% header), once
-        parity_bits = 24 * int(delta * M) * (500 + 1) * 32 * 1.1
-        bits_c = parity_bits + ep_c * 24 * 2 * fleet.packet_bits
+        # one-time parity shipment from the strategy's own accounting,
+        # plus the per-epoch traffic up to the convergence point
+        parity_bits = res_c.uplink_bits_total - res_c.epochs * per_epoch_bits
+        bits_c = parity_bits + ep_c * per_epoch_bits
         emit(f"fig5/cfl_delta={delta}", t.us / epochs,
              f"gain={g:.2f};t_conv={t_c:.0f}s;"
              f"comm_load_ratio={bits_c / bits_u:.2f}")

@@ -7,6 +7,9 @@ estimate should stay unbiased under arbitrary client skew.  We test the
 claim: each client's features get a client-specific anisotropic scaling
 (condition number up to `skew`), making local gradients heavily biased
 toward each client's own geometry.
+
+On the Session API the whole experiment is: same two Session configs as the
+iid benchmarks, different `TrainData`.
 """
 from __future__ import annotations
 
@@ -14,16 +17,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sim import simulator as S
+from repro.api import TrainData, coding_gain
 from repro.sim.network import paper_fleet
-from repro.sim.simulator import coding_gain, convergence_time
 
-from .common import D, ELL, LR, M, N_DEVICES, Timer, emit
+from .common import D, ELL, N_DEVICES, Timer, cfl_session, emit, \
+    uncoded_session
 
 TARGET = 1e-3
 
 
-def noniid_problem(key, skew: float):
+def noniid_problem(key, skew: float) -> TrainData:
     """Client i's features ~ N(0, diag(s_i)) with log-uniform s_i spectra."""
     k1, k2, k3, k4 = jax.random.split(key, 4)
     xs = jax.random.normal(k1, (N_DEVICES, ELL, D), dtype=jnp.float32)
@@ -35,22 +38,18 @@ def noniid_problem(key, skew: float):
     beta = jax.random.normal(k2, (D,), dtype=jnp.float32)
     ys = jnp.einsum("nld,d->nl", xs, beta) \
         + jax.random.normal(k3, (N_DEVICES, ELL), dtype=jnp.float32)
-    return xs, ys, beta
+    return TrainData(xs=xs, ys=ys, beta_true=beta)
 
 
 def main(epochs: int = 1200, skews=(1.0, 4.0, 16.0)) -> None:
     fleet = paper_fleet(0.2, 0.2, seed=0)
+    sess_u = uncoded_session(fleet, epochs)
+    sess_c = cfl_session(fleet, epochs, delta=0.28)
     for skew in skews:
-        xs, ys, beta_true = noniid_problem(jax.random.PRNGKey(0), skew)
+        data = noniid_problem(jax.random.PRNGKey(0), skew)
         with Timer() as t:
-            res_u = S.run_uncoded(fleet, xs, ys, beta_true, lr=LR,
-                                  epochs=epochs,
-                                  rng=np.random.default_rng(0))
-            res_c = S.run_cfl(fleet, xs, ys, beta_true, lr=LR,
-                              epochs=epochs, rng=np.random.default_rng(0),
-                              key=jax.random.PRNGKey(7),
-                              fixed_c=int(0.28 * M),
-                              include_upload_delay=False)
+            res_u = sess_u.run(data, rng=np.random.default_rng(0))
+            res_c = sess_c.run(data, rng=np.random.default_rng(0))
         g = coding_gain(res_u, res_c, TARGET)
         emit(f"noniid/skew={skew}", t.us / (2 * epochs),
              f"final_nmse_cfl={res_c.final_nmse():.3e};"

@@ -17,7 +17,7 @@ from repro.configs import get_config
 from repro.fed.coded_head import train_coded_head
 from repro.models import transformer as T
 from repro.sim.network import paper_fleet
-from repro.sim.simulator import coding_gain
+from repro.api import coding_gain
 
 N_CLIENTS, ELL, SEQ = 12, 64, 32
 

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a 30-epoch quickstart smoke on the
+# Strategy/Session API.
+#
+#   scripts/ci.sh [--perf]     # --perf additionally runs the session
+#                              # micro-benchmark (slower)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo
+echo "== smoke: examples/quickstart.py --epochs 30 (new API) =="
+python examples/quickstart.py --epochs 30
+
+if [[ "${1:-}" == "--perf" ]]; then
+    echo
+    echo "== perf: scan-jitted Session vs legacy loop =="
+    python -m benchmarks.perf_session --epochs 200
+fi
+
+echo
+echo "CI OK"

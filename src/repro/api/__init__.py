@@ -1,0 +1,18 @@
+"""Unified Strategy/Session training surface (see API.md).
+
+The `Strategy` protocol makes every coding scheme — uncoded FL, the paper's
+CFL, gradient coding, and future schemes — a pluggable class; the `Session`
+runner executes any of them through one scan-jitted epoch engine and returns
+a unified `TraceReport`.
+"""
+from .report import TraceReport, coding_gain, convergence_time
+from .session import Session
+from .strategy import (CodedFL, EpochSchedule, GradientCodingFL, Strategy,
+                       TrainData, UncodedFL)
+
+__all__ = [
+    "TraceReport", "coding_gain", "convergence_time",
+    "Session",
+    "Strategy", "TrainData", "EpochSchedule",
+    "UncodedFL", "CodedFL", "GradientCodingFL",
+]

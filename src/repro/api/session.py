@@ -1,0 +1,136 @@
+"""`Session`: the single scan-jitted epoch engine behind every entry point.
+
+One `Session` replaces the three copy-pasted Python epoch loops that used to
+live in `sim.simulator.run_uncoded` / `run_cfl`, `fed.trainer`, and the
+gradient-coding script: the strategy pre-samples every epoch's
+delays/arrivals up front on the host (NumPy, shape `(epochs, n)`), and the
+whole training trace — gradient estimate, GD update, NMSE — executes in one
+jitted `jax.lax.scan`.  The device is synced exactly once per run (to fetch
+the final NMSE trace) instead of once per epoch, which is what dominated
+wall time at small `d`.
+
+Lifecycle:
+
+    data    = TrainData.linreg(jax.random.PRNGKey(0), n=24, ell=300, d=500)
+    fleet   = paper_fleet(0.2, 0.2, seed=0)
+    session = Session(strategy=CodedFL(key=jax.random.PRNGKey(1),
+                                       fixed_c=2016),
+                      fleet=fleet, lr=0.0085, epochs=600)
+    report  = session.run(data)          # -> TraceReport
+
+Compiled engines are cached on the session keyed by the strategy's static
+structure and the data/arrival shapes, so sweeps that reuse a session (or
+re-run it with fresh randomness) pay for tracing once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Dict, Hashable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+
+from .report import TraceReport
+from .strategy import EpochSchedule, Strategy, TrainData
+
+if TYPE_CHECKING:  # annotation-only: keeps the api layer free of sim imports
+    from repro.sim.network import FleetSpec
+
+
+@dataclasses.dataclass
+class Session:
+    """Runs one strategy over one fleet with a scan-jitted epoch engine.
+
+    strategy: the coding scheme (UncodedFL / CodedFL / GradientCodingFL /
+              any user Strategy)
+    fleet:    delay + link parameters of the simulated fleet
+    lr:       GD step size (Eq. 3)
+    epochs:   number of training epochs per run
+    seed:     default NumPy seed for delay sampling when `run` is not handed
+              an explicit generator
+    """
+
+    strategy: Strategy
+    fleet: "FleetSpec"
+    lr: float
+    epochs: int
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.epochs < 0:
+            raise ValueError(f"epochs must be >= 0, got {self.epochs}")
+        self._engines: Dict[Hashable, callable] = {}
+
+    # -- engine ------------------------------------------------------------
+
+    def _engine(self, state, data: TrainData,
+                dev: Dict[str, jax.Array], arrivals: Dict[str, jax.Array]):
+        key = (type(self.strategy).__name__,
+               self.strategy.engine_key(state),
+               float(self.lr), data.m, str(data.xs.dtype),
+               tuple(sorted((k, v.shape) for k, v in dev.items())),
+               tuple(sorted((k, v.shape) for k, v in arrivals.items())))
+        fn = self._engines.get(key)
+        if fn is not None:
+            return fn
+
+        strategy, lr, m, d = self.strategy, self.lr, data.m, data.d
+        dtype = data.xs.dtype
+
+        def engine(dev, beta_true, arr):
+            # lr/m as on-device scalars: identical arithmetic to the legacy
+            # eager `gd_update(beta, g, lr, m)` jitted call
+            lr_s = jnp.asarray(lr, dtype=dtype)
+            m_s = jnp.asarray(m, dtype=jnp.int32)
+            beta0 = jnp.zeros(d, dtype=dtype)
+
+            def step(beta, arr_t):
+                g = strategy.round_contributions(state, dev, beta, arr_t)
+                beta = aggregation.gd_update(beta, g, lr_s, m_s)
+                return beta, aggregation.nmse(beta, beta_true)
+
+            _, trace = jax.lax.scan(step, beta0, arr)
+            nmse0 = aggregation.nmse(beta0, beta_true)
+            return jnp.concatenate([nmse0[None], trace])
+
+        fn = jax.jit(engine)
+        self._engines[key] = fn
+        return fn
+
+    # -- public API --------------------------------------------------------
+
+    def plan(self, data: TrainData):
+        """Run the strategy's one-time setup (exposed so sweeps and
+        benchmarks can amortize planning/encoding across runs)."""
+        return self.strategy.plan(self.fleet, data)
+
+    def run(self, data: TrainData,
+            rng: Optional[np.random.Generator] = None,
+            label: Optional[str] = None, state=None) -> TraceReport:
+        """Plan (unless a pre-planned `state` is given), pre-sample, and
+        execute the full training trace."""
+        if rng is None:
+            rng = np.random.default_rng(self.seed)
+        if state is None:
+            state = self.strategy.plan(self.fleet, data)
+        sched: EpochSchedule = self.strategy.sample_epochs(
+            state, self.fleet, self.epochs, rng)
+
+        dev = self.strategy.device_state(state, data)
+        arrivals = {k: jnp.asarray(v) for k, v in sched.arrivals.items()}
+        engine = self._engine(state, data, dev, arrivals)
+        nmse_trace = np.asarray(engine(dev, data.beta_true, arrivals))
+
+        times = sched.t0 + np.concatenate(
+            [[0.0], np.cumsum(sched.durations)])
+        return TraceReport(
+            times=times,
+            nmse=nmse_trace,
+            epoch_durations=np.asarray(sched.durations),
+            label=label if label is not None else self.strategy.label,
+            setup_time=sched.setup_time,
+            uplink_bits_total=self.strategy.uplink_bits(
+                state, self.fleet, self.epochs))

@@ -23,6 +23,7 @@ Key contrasts with CFL recorded in EXPERIMENTS.md §Ablation:
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +31,10 @@ import numpy as np
 
 from repro.core import aggregation
 from repro.core.delay_model import sample_total
-from repro.sim.network import FleetSpec
-from repro.sim.simulator import SimResult
+
+if TYPE_CHECKING:  # annotation-only: core must not import sim/api at runtime
+    from repro.api.report import TraceReport
+    from repro.sim.network import FleetSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,32 +84,13 @@ def epoch_time(fleet: FleetSpec, plan: GradCodingPlan, ell: int,
 
 def run_gradient_coding(fleet: FleetSpec, xs, ys, beta_true, lr: float,
                         epochs: int, rng: np.random.Generator, r: int,
-                        label: str = "gradcode") -> SimResult:
-    """Wall-clock simulation of fractional-repetition gradient coding."""
-    n, ell, d = xs.shape
-    m = n * ell
-    plan = make_plan(n, r)
-    beta = jnp.zeros(d, dtype=xs.dtype)
+                        label: str = "gradcode") -> TraceReport:
+    """Wall-clock simulation of fractional-repetition gradient coding.
 
-    # one-time cost: each client receives (r-1) shards of raw data from its
-    # group peers (the privacy-relevant transfer CFL avoids)
-    share_bits = (r - 1) * ell * (d + 1) * 32 * 1.1
-    shard_time = float(np.max(share_bits / fleet.link_rates))
-
-    times = [shard_time]
-    errs = [float(aggregation.nmse(beta, beta_true))]
-    durs = []
-    t = shard_time
-    for _ in range(epochs):
-        dur = epoch_time(fleet, plan, ell, rng)
-        # exact full gradient (>=1 returner per group by construction of
-        # the duration; groups partition the data)
-        g = aggregation.uncoded_full_gradient(xs, ys, beta)
-        beta = aggregation.gd_update(beta, g, lr, m)
-        t += dur
-        times.append(t)
-        durs.append(dur)
-        errs.append(float(aggregation.nmse(beta, beta_true)))
-    bits = n * share_bits + epochs * n * 2 * fleet.packet_bits
-    return SimResult(np.array(times), np.array(errs), np.array(durs), label,
-                     setup_time=shard_time, uplink_bits_total=bits)
+    Deprecated shim: delegates to the scan-jitted
+    `Session(strategy=GradientCodingFL(r=...))` (see API.md).
+    """
+    from repro.api import GradientCodingFL, Session, TrainData
+    session = Session(strategy=GradientCodingFL(r=r, label=label),
+                      fleet=fleet, lr=lr, epochs=epochs)
+    return session.run(TrainData(xs=xs, ys=ys, beta_true=beta_true), rng=rng)

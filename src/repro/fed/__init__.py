@@ -1,7 +1,8 @@
 """Federated substrate: straggler-aware load allocation + deadline-masked
 aggregation for arbitrary models, and the exact coded-head path."""
-from .trainer import FedConfig, FedState, fed_setup, fed_round, fed_train
+from .trainer import (FedConfig, FedState, fed_round, fed_setup, fed_train,
+                      presample_round_weights, round_weights)
 from .coded_head import train_coded_head
 
 __all__ = ["FedConfig", "FedState", "fed_setup", "fed_round", "fed_train",
-           "train_coded_head"]
+           "round_weights", "presample_round_weights", "train_coded_head"]

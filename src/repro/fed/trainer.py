@@ -41,6 +41,7 @@ class FedConfig:
     target_sequences: int           # global batch the server wants per round
     deadline_quantile: float = 1.0  # scale t* (1.0 = Eq. 16 deadline)
     min_return_prob: float = 1e-3   # clients below this are never scheduled
+                                    # AND the importance-weight clip floor
 
 
 @dataclasses.dataclass
@@ -48,6 +49,7 @@ class FedState:
     plan: RedundancyPlan
     p_return: np.ndarray            # (n,) Pr{T_i <= t*}
     edge: DeviceDelayParams
+    min_return_prob: float          # from FedConfig (see round_weights)
     round_idx: int = 0
     wall_clock: float = 0.0
 
@@ -70,7 +72,8 @@ def fed_setup(edge: DeviceDelayParams, cfg: FedConfig) -> FedState:
     # local dataset sizes.  Instead we bisect on t ourselves.
     plan = _solve_loads(edge, sizes, target)
     p = total_cdf(edge, plan.loads, plan.t_star)
-    return FedState(plan=plan, p_return=p, edge=edge)
+    return FedState(plan=plan, p_return=p, edge=edge,
+                    min_return_prob=cfg.min_return_prob)
 
 
 def _solve_loads(edge: DeviceDelayParams, sizes: np.ndarray,
@@ -114,6 +117,22 @@ def masked_loss(loss_per_seq_fn: Callable, params, batch: dict,
     return jnp.sum(per_seq * seq_weights) / denom
 
 
+def _round_client_weights(state: FedState,
+                          rng: np.random.Generator) -> np.ndarray:
+    """One round's per-client importance weights: 0 (dropped) or 1/p_i.
+
+    Clients whose return probability is below `state.min_return_prob`
+    (FedConfig.min_return_prob) are never scheduled: their gradients are
+    dropped even if the sampled delay lands, and the same floor clips the
+    importance weights so a barely-returning client cannot blow up the
+    aggregate with a near-infinite 1/p_i."""
+    t_i = sample_total(state.edge, state.plan.loads, rng)
+    scheduled = state.p_return >= state.min_return_prob
+    received = (t_i <= state.plan.t_star) & (state.plan.loads > 0) & scheduled
+    p = np.clip(state.p_return, state.min_return_prob, 1.0)
+    return np.where(received, 1.0 / p, 0.0)            # unbiased masking
+
+
 def round_weights(state: FedState, rng: np.random.Generator,
                   batch_clients: np.ndarray) -> tuple[np.ndarray, float]:
     """Sample one round's arrivals.
@@ -121,37 +140,60 @@ def round_weights(state: FedState, rng: np.random.Generator,
     batch_clients: (B,) client id of each sequence in the global batch
     (sequences are laid out client-major along the data axis).
     Returns (seq_weights (B,), round wall time = t*)."""
-    t_i = sample_total(state.edge, state.plan.loads, rng)
-    received = (t_i <= state.plan.t_star) & (state.plan.loads > 0)
-    p = np.clip(state.p_return, 1e-3, 1.0)
-    w_client = np.where(received, 1.0 / p, 0.0)        # unbiased masking
+    w_client = _round_client_weights(state, rng)
     return w_client[batch_clients], float(state.plan.t_star)
+
+
+def presample_round_weights(state: FedState, rng: np.random.Generator,
+                            n_rounds: int) -> np.ndarray:
+    """Pre-sample every round's per-client weights up front: (rounds, n).
+
+    The Session-style analogue for the non-linear trainer: all delay
+    randomness is drawn once (same generator order as per-round
+    `round_weights` calls), so the training loop itself touches no NumPy
+    sampling and per-round host work is a single array index."""
+    return np.stack([_round_client_weights(state, rng)
+                     for _ in range(n_rounds)])
+
+
+def _apply_round(state: FedState, grad_fn, params, opt: Optimizer,
+                 opt_state, batch: dict, seq_weights: np.ndarray):
+    """Masked-gradient update for one round's (pre)sampled weights."""
+    loss, grads = grad_fn(params, batch,
+                          jnp.asarray(seq_weights, dtype=jnp.float32))
+    updates, opt_state = opt.update(grads, opt_state, params)
+    params = apply_updates(params, updates)
+    state.round_idx += 1
+    state.wall_clock += float(state.plan.t_star)
+    return params, opt_state, float(loss)
 
 
 def fed_round(state: FedState, grad_fn, params, opt: Optimizer, opt_state,
               batch: dict, batch_clients: np.ndarray,
               rng: np.random.Generator):
     """One synchronous round: sample arrivals, masked gradient, update."""
-    w, dt = round_weights(state, rng, batch_clients)
-    loss, grads = grad_fn(params, batch, jnp.asarray(w, dtype=jnp.float32))
-    updates, opt_state = opt.update(grads, opt_state, params)
-    params = apply_updates(params, updates)
-    state.round_idx += 1
-    state.wall_clock += dt
-    return params, opt_state, float(loss)
+    w, _ = round_weights(state, rng, batch_clients)
+    return _apply_round(state, grad_fn, params, opt, opt_state, batch, w)
 
 
 def fed_train(state: FedState, grad_fn, params, opt: Optimizer,
               batches: Iterator[tuple[dict, np.ndarray]], n_rounds: int,
               seed: int = 0, log_every: int = 0):
-    """Run n_rounds of federated training; returns (params, losses)."""
+    """Run n_rounds of federated training; returns (params, losses).
+
+    All per-round arrival randomness is pre-sampled up front
+    (`presample_round_weights`, same draw order as per-round sampling), so
+    the loop body is pure model work — mirroring how `repro.api.Session`
+    pre-samples delay tensors for the linear-model strategies."""
     rng = np.random.default_rng(seed)
     opt_state = opt.init(params)
+    w_rounds = presample_round_weights(state, rng, n_rounds)  # (rounds, n)
     losses = []
     for r in range(n_rounds):
         batch, batch_clients = next(batches)
-        params, opt_state, loss = fed_round(
-            state, grad_fn, params, opt, opt_state, batch, batch_clients, rng)
+        params, opt_state, loss = _apply_round(
+            state, grad_fn, params, opt, opt_state, batch,
+            w_rounds[r][batch_clients])
         losses.append(loss)
         if log_every and (r + 1) % log_every == 0:
             print(f"round {r+1}: loss {loss:.4f} "

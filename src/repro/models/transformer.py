@@ -506,8 +506,13 @@ def _self_block_decode(cfg: ArchConfig, bp: dict, x, cache_l: dict, pos):
 
 
 def _moe_block_decode(cfg: ArchConfig, bp: dict, x, cache_l: dict, pos):
+    # Decode groups hold only B tokens, so the training-time capacity bound
+    # int(cf * k * group / E) can round below the tokens one expert may
+    # receive, silently dropping a token's FFN output.  Decode must match
+    # the full forward exactly: cf = E makes capacity k * group (drop-free)
+    # at negligible buffer cost for decode-sized groups.
     dims = M.MoEDims(cfg.moe.n_experts, cfg.moe.top_k, cfg.d_model, cfg.d_ff,
-                     cfg.moe.group_size, cfg.moe.capacity_factor)
+                     cfg.moe.group_size, float(cfg.moe.n_experts))
     h = L.apply_norm(bp["attn_norm"], x, cfg.norm)
     attn, new_cache = L.decode_self_attention(
         bp["attn"], h, cache_l, pos, n_heads=cfg.n_heads,

@@ -1,81 +1,50 @@
-"""Wall-clock simulation of uncoded FL vs CFL (paper §IV).
+"""Wall-clock simulation of uncoded FL vs CFL (paper §IV) — legacy surface.
 
-Uncoded FL: every epoch the server waits for ALL n partial gradients
-(synchronous full-batch GD) — epoch duration = max_i T_i, gradient exact.
+This module is now a thin compatibility shim over the unified
+Strategy/Session API in `repro.api` (see API.md for the migration table):
 
-CFL: the server waits exactly t*; clients whose sampled T_i <= t* contribute
-their systematic partial gradients, the server contributes the parity
-gradient if its own compute finished (device n+1 in Eq. 13); the combination
-(Eqs. 18-19) is an approximately unbiased full-gradient estimate.
+    run_uncoded(...)  ->  Session(strategy=UncodedFL(), ...).run(data)
+    run_cfl(...)      ->  Session(strategy=CodedFL(...), ...).run(data)
+    SimResult         ->  repro.api.TraceReport (alias)
 
-Both simulators share the same sampled-delay machinery so coding gain is an
-apples-to-apples wall-clock ratio.  The gradient math runs jitted in JAX; the
-delay sampling is NumPy (tiny: n=24 per epoch).
+The shims preserve the exact semantics AND the exact NumPy generator draw
+order of the original per-epoch Python loops, so traces produced through
+either surface are identical for the same seeds.  New code should construct
+`Session`s directly: the Session pre-samples all per-epoch delay tensors up
+front and runs the entire training trace in one jitted `jax.lax.scan`,
+avoiding the per-epoch host<->device sync this module's old loops paid.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, cfl
-from repro.core.delay_model import sample_total
+from repro.api import (CodedFL, Session, TraceReport, TrainData, UncodedFL,
+                       coding_gain, convergence_time)
 from .network import FleetSpec
 
+# Back-compat alias: SimResult was the old name of the unified trace report.
+SimResult = TraceReport
 
-@dataclasses.dataclass
-class SimResult:
-    """Trace of one simulated training run."""
-
-    times: np.ndarray        # (epochs+1,) wall-clock at each model snapshot
-    nmse: np.ndarray         # (epochs+1,) NMSE at each snapshot
-    epoch_durations: np.ndarray  # (epochs,) per-epoch wall time
-    label: str
-    setup_time: float = 0.0  # one-time parity upload wall time (CFL only)
-    uplink_bits_total: float = 0.0  # total bits moved device->server
-
-    def final_nmse(self) -> float:
-        return float(self.nmse[-1])
+__all__ = ["SimResult", "generate_linreg", "run_uncoded", "run_cfl",
+           "convergence_time", "coding_gain"]
 
 
 def generate_linreg(key, n: int, ell: int, d: int, noise_std: float = 1.0):
     """Paper §IV data: X iid N(0,1), beta ~ N(0,1)^d, y = X beta + z."""
-    k1, k2, k3 = jax.random.split(key, 3)
-    xs = jax.random.normal(k1, (n, ell, d), dtype=jnp.float32)
-    beta = jax.random.normal(k2, (d,), dtype=jnp.float32)
-    zs = noise_std * jax.random.normal(k3, (n, ell), dtype=jnp.float32)
-    ys = jnp.einsum("nld,d->nl", xs, beta) + zs
-    return xs, ys, beta
+    data = TrainData.linreg(key, n, ell, d, noise_std=noise_std)
+    return data.xs, data.ys, data.beta_true
 
 
 def run_uncoded(fleet: FleetSpec, xs, ys, beta_true, lr: float,
                 epochs: int, rng: np.random.Generator,
-                label: str = "uncoded") -> SimResult:
+                label: str = "uncoded") -> TraceReport:
     """Synchronous uncoded FL: wait for everyone each epoch."""
-    n, ell, d = xs.shape
-    m = n * ell
-    beta = jnp.zeros(d, dtype=xs.dtype)
-    full_load = np.full(n, ell)
-
-    times = [0.0]
-    errs = [float(aggregation.nmse(beta, beta_true))]
-    durs = []
-    t = 0.0
-    for _ in range(epochs):
-        t_i = sample_total(fleet.edge, full_load, rng)
-        dur = float(np.max(t_i))  # wait for all stragglers
-        g = aggregation.uncoded_full_gradient(xs, ys, beta)
-        beta = aggregation.gd_update(beta, g, lr, m)
-        t += dur
-        times.append(t)
-        durs.append(dur)
-        errs.append(float(aggregation.nmse(beta, beta_true)))
-    bits = epochs * n * 2 * fleet.packet_bits  # model down + gradient up
-    return SimResult(np.array(times), np.array(errs), np.array(durs), label,
-                     uplink_bits_total=bits)
+    session = Session(strategy=UncodedFL(label=label), fleet=fleet,
+                      lr=lr, epochs=epochs)
+    return session.run(TrainData(xs=xs, ys=ys, beta_true=beta_true), rng=rng)
 
 
 def run_cfl(fleet: FleetSpec, xs, ys, beta_true, lr: float, epochs: int,
@@ -83,60 +52,11 @@ def run_cfl(fleet: FleetSpec, xs, ys, beta_true, lr: float, epochs: int,
             fixed_c: Optional[int] = None, c_up: Optional[int] = None,
             include_upload_delay: bool = True,
             server_always_returns: bool = False,
-            use_kernel: bool = False, label: str = "cfl") -> SimResult:
+            use_kernel: bool = False, label: str = "cfl") -> TraceReport:
     """Coded federated learning with the Eq. 14-16 redundancy plan."""
-    n, ell, d = xs.shape
-    m = n * ell
-    state = cfl.setup(key, xs, ys, fleet.edge, fleet.server,
-                      fixed_c=fixed_c, c_up=c_up, use_kernel=use_kernel)
-    plan = state.plan
-    t_star = plan.t_star
-
-    # One-time parity upload: each device ships c rows of (d+1) floats over
-    # its own link; devices upload in parallel so the fleet-level delay is
-    # the slowest device (see DESIGN.md §7 note 1 — we report both regimes).
-    upload_bits = state.parity_upload_bits()
-    packets = np.ceil(upload_bits / fleet.packet_bits)
-    # each packet is retransmitted Geometric(1-p) times
-    retrans = rng.geometric(1.0 - fleet.edge.p, size=n)
-    upload_time = float(np.max(packets * retrans * (fleet.packet_bits / fleet.link_rates))) \
-        if state.c > 0 else 0.0
-
-    beta = jnp.zeros(d, dtype=xs.dtype)
-    t = upload_time if include_upload_delay else 0.0
-    times = [t]
-    errs = [float(aggregation.nmse(beta, beta_true))]
-    durs = []
-    for _ in range(epochs):
-        t_i = sample_total(fleet.edge, plan.loads, rng)
-        received = jnp.asarray((t_i <= t_star) & (plan.loads > 0),
-                               dtype=xs.dtype)
-        if server_always_returns or state.c == 0:
-            par_ok = jnp.asarray(1.0, dtype=xs.dtype)
-        else:
-            t_srv = sample_total(fleet.server, np.array([state.c]), rng)[0]
-            par_ok = jnp.asarray(float(t_srv <= t_star), dtype=xs.dtype)
-        g = cfl.epoch_gradient(state, xs, ys, beta, received, par_ok,
-                               use_kernel=use_kernel)
-        beta = aggregation.gd_update(beta, g, lr, m)
-        t += t_star
-        times.append(t)
-        durs.append(t_star)
-        errs.append(float(aggregation.nmse(beta, beta_true)))
-    bits = float(np.sum(upload_bits)) + epochs * n * 2 * fleet.packet_bits
-    return SimResult(np.array(times), np.array(errs), np.array(durs), label,
-                     setup_time=upload_time, uplink_bits_total=bits)
-
-
-def convergence_time(result: SimResult, target_nmse: float) -> float:
-    """First wall-clock time at which NMSE <= target (inf if never)."""
-    hit = np.nonzero(result.nmse <= target_nmse)[0]
-    return float(result.times[hit[0]]) if hit.size else float("inf")
-
-
-def coding_gain(uncoded: SimResult, coded: SimResult,
-                target_nmse: float) -> float:
-    """Ratio of uncoded to coded convergence time (paper Figs. 4-5)."""
-    tu = convergence_time(uncoded, target_nmse)
-    tc = convergence_time(coded, target_nmse)
-    return tu / tc
+    strategy = CodedFL(key=key, fixed_c=fixed_c, c_up=c_up,
+                       include_upload_delay=include_upload_delay,
+                       server_always_returns=server_always_returns,
+                       use_kernel=use_kernel, label=label)
+    session = Session(strategy=strategy, fleet=fleet, lr=lr, epochs=epochs)
+    return session.run(TrainData(xs=xs, ys=ys, beta_true=beta_true), rng=rng)

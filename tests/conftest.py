@@ -1,0 +1,14 @@
+"""Pytest configuration: make `src/` and the tests dir importable.
+
+Lets `pytest` work from the repo root without PYTHONPATH=src, and lets test
+modules import sibling helpers (e.g. `_hyp`, the hypothesis fallback shim).
+"""
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+
+for path in (_HERE, _SRC):
+    if path not in sys.path:
+        sys.path.insert(0, path)

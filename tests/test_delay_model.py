@@ -1,7 +1,7 @@
 """Unit + property tests for the §II-A delay model."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or a deterministic fallback
 
 from repro.core.delay_model import (DeviceDelayParams, compute_cdf,
                                     sample_total, total_cdf)

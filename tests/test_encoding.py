@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or a deterministic fallback
 
 from repro.core.encoding import encode_client, encode_fleet, generator_matrix
 

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or a deterministic fallback
 
 from repro.kernels.coded_grad import ops as cg_ops
 from repro.kernels.encode import ops as en_ops

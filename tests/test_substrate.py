@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or a deterministic fallback
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data.partition import partition_iid, partition_noniid
@@ -191,6 +191,37 @@ def test_fed_setup_and_round():
     # weights are 0 (dropped) or 1/p (importance-scaled)
     nz = w[w > 0]
     assert np.all(nz >= 1.0)
+
+
+def test_min_return_prob_gates_scheduling_and_clips_weights():
+    """FedConfig.min_return_prob: clients below the floor are never
+    scheduled, and 1/p_i importance weights are clipped at the floor."""
+    from repro.core.delay_model import DeviceDelayParams
+    from repro.core.redundancy import RedundancyPlan
+    from repro.fed.trainer import FedState, presample_round_weights, \
+        round_weights
+
+    edge = DeviceDelayParams(a=np.array([1e-3, 1e-3]),
+                             mu=np.array([100.0, 100.0]),
+                             tau=np.array([0.01, 0.01]),
+                             p=np.array([0.1, 0.1]))
+    plan = RedundancyPlan(loads=np.array([8, 8]), c=0, t_star=1e9,
+                          p_return=np.array([0.9, 1e-5, 1.0]),
+                          expected_agg=16.0, loads_cap_total=16)
+    state = FedState(plan=plan, p_return=np.array([0.9, 1e-5]), edge=edge,
+                     min_return_prob=1e-3)
+    rng = np.random.default_rng(0)
+    batch_clients = np.array([0, 0, 1, 1])
+    for _ in range(20):
+        w, _ = round_weights(state, rng, batch_clients)
+        assert np.all(w[2:] == 0.0), "below-floor client must never land"
+        assert np.all(w[:2] <= 1.0 / 1e-3 + 1e-9)  # clip bounds the weight
+
+    # pre-sampled weights replay the exact same generator stream
+    w_seq = [round_weights(state, np.random.default_rng(5), batch_clients)[0]
+             for _ in range(1)]
+    pre = presample_round_weights(state, np.random.default_rng(5), 1)
+    np.testing.assert_array_equal(pre[0][batch_clients], w_seq[0])
 
 
 def test_fed_round_unbiasedness():
