@@ -31,12 +31,13 @@ def uncoded_session(fleet, epochs: int) -> Session:
 def cfl_session(fleet, epochs: int, delta: float,
                 include_upload_delay: bool = False,
                 server_always_returns: bool = False,
-                key_seed: int = 7) -> Session:
+                key_seed: int = 7, redundancy_plan=None) -> Session:
     strategy = CodedFL(key=jax.random.PRNGKey(key_seed),
                        fixed_c=int(delta * M),
                        include_upload_delay=include_upload_delay,
                        server_always_returns=server_always_returns,
-                       label=f"cfl_delta={delta}")
+                       label=f"cfl_delta={delta}",
+                       redundancy_plan=redundancy_plan)
     return Session(strategy=strategy, fleet=fleet, lr=LR, epochs=epochs)
 
 

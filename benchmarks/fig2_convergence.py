@@ -2,13 +2,14 @@
 heterogeneity (0.2, 0.2), benchmarked against the least-squares bound.
 
 Each curve is one `Session` run: uncoded FL plus a fixed-`c` sweep of
-`CodedFL` strategies over the same data and delay seed.
+`CodedFL` strategies over the same data and delay seed.  The whole sweep's
+redundancy planning happens in ONE batched solver call (`plan_sweep`).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.api import TrainData, convergence_time
+from repro.api import TrainData, convergence_time, plan_sweep
 from repro.sim.network import paper_fleet
 
 from .common import D, Timer, cfl_session, emit, problem, uncoded_session
@@ -29,22 +30,26 @@ def main(epochs: int = 1200, deltas=(0.0, 0.07, 0.13, 0.16, 0.28)) -> None:
     bound = ls_bound(data)
     emit("fig2/ls_bound_nmse", 0.0, f"nmse={bound:.3e}")
 
+    cfl_deltas = [d for d in deltas if d != 0.0]
+    sessions = [uncoded_session(fleet, epochs)] + \
+        [cfl_session(fleet, epochs, d, include_upload_delay=True,
+                     key_seed=100) for d in cfl_deltas]
     with Timer() as t:
-        res_u = uncoded_session(fleet, epochs).run(
-            data, rng=np.random.default_rng(0))
+        states = plan_sweep(sessions, data)  # one batched redundancy solve
+    emit("fig2/plan_sweep", t.us / len(sessions),
+         f"sessions={len(sessions)}")
+
+    with Timer() as t:
+        res_u = sessions[0].run(data, rng=np.random.default_rng(0),
+                                state=states[0])
     emit("fig2/uncoded", t.us / epochs,
          f"final_nmse={res_u.final_nmse():.3e};"
          f"t_conv_1e-3={convergence_time(res_u, 1e-3):.0f}s;"
          f"t_conv_3e-4={convergence_time(res_u, 3e-4):.0f}s")
 
-    for delta in deltas:
-        if delta == 0.0:
-            continue
+    for delta, sess, state in zip(cfl_deltas, sessions[1:], states[1:]):
         with Timer() as t:
-            res_c = cfl_session(fleet, epochs, delta,
-                                include_upload_delay=True,
-                                key_seed=100).run(
-                data, rng=np.random.default_rng(0))
+            res_c = sess.run(data, rng=np.random.default_rng(0), state=state)
         emit(f"fig2/cfl_delta={delta}", t.us / epochs,
              f"t_star={res_c.epoch_durations[0]:.2f}s;"
              f"setup={res_c.setup_time:.0f}s;"

@@ -3,13 +3,14 @@ NMSE <= 3e-4) across heterogeneity levels, at the per-level optimal delta.
 
 One uncoded `Session` per heterogeneity level plus a delta sweep of
 `CodedFL` sessions — the engine is traced once per level and reused across
-the sweep (same shapes, same static structure).
+the sweep, and every (level, delta) redundancy problem across ALL levels is
+solved in ONE batched planner call (`plan_sweep` batches across fleets).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.api import coding_gain, convergence_time
+from repro.api import coding_gain, convergence_time, plan_sweep
 from repro.sim.network import paper_fleet
 
 from .common import TARGET_NMSE, Timer, cfl_session, emit, problem, \
@@ -20,15 +21,28 @@ def main(epochs: int = 1400,
          levels=((0.0, 0.0), (0.1, 0.1), (0.2, 0.2)),
          deltas=(0.07, 0.13, 0.28, 0.4, 0.5)) -> None:
     data = problem(0)
+    fleets = {lv: paper_fleet(*lv, seed=0) for lv in levels}
+    sessions, index = [], {}
+    for lv in levels:
+        index[lv] = len(sessions)
+        sessions.append(uncoded_session(fleets[lv], epochs))
+        sessions.extend(cfl_session(fleets[lv], epochs, d) for d in deltas)
+
+    with Timer() as t:
+        states = plan_sweep(sessions, data)  # one solve across all levels
+    emit("fig4/plan_sweep", t.us / len(sessions),
+         f"sessions={len(sessions)};levels={len(levels)}")
+
     for nu_c, nu_l in levels:
-        fleet = paper_fleet(nu_c, nu_l, seed=0)
+        base = index[(nu_c, nu_l)]
         with Timer() as t:
-            res_u = uncoded_session(fleet, epochs).run(
-                data, rng=np.random.default_rng(0))
+            res_u = sessions[base].run(data, rng=np.random.default_rng(0),
+                                       state=states[base])
             best_gain, best_delta = -np.inf, None
-            for delta in deltas:
-                res_c = cfl_session(fleet, epochs, delta).run(
-                    data, rng=np.random.default_rng(0))
+            for k, delta in enumerate(deltas, start=1):
+                res_c = sessions[base + k].run(
+                    data, rng=np.random.default_rng(0),
+                    state=states[base + k])
                 g = coding_gain(res_u, res_c, TARGET_NMSE)
                 if np.isfinite(g) and g > best_gain:
                     best_gain, best_delta = g, delta

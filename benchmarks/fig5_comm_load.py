@@ -3,13 +3,14 @@ heterogeneity (0.4, 0.4) — more parity converges faster but ships more bits.
 
 Migrated to the Session API: the uplink accounting comes straight from each
 strategy's `uplink_bits` (via `TraceReport.uplink_bits_total`) prorated to
-the convergence epoch.
+the convergence epoch.  The delta sweep's redundancy planning happens in
+ONE batched solver call (`plan_sweep`).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.api import coding_gain, convergence_time
+from repro.api import coding_gain, convergence_time, plan_sweep
 from repro.sim.network import paper_fleet
 
 from .common import N_DEVICES, Timer, cfl_session, emit, problem, \
@@ -23,19 +24,26 @@ def main(epochs: int = 1600, deltas=(0.07, 0.13, 0.16, 0.28, 0.4),
     data = problem(0)
     fleet = paper_fleet(nu, nu, seed=0)
     per_epoch_bits = N_DEVICES * 2 * fleet.packet_bits  # model down + grad up
+
+    sessions = [uncoded_session(fleet, epochs)] + \
+        [cfl_session(fleet, epochs, d) for d in deltas]
     with Timer() as t:
-        res_u = uncoded_session(fleet, epochs).run(
-            data, rng=np.random.default_rng(0))
+        states = plan_sweep(sessions, data)  # one batched redundancy solve
+    emit("fig5/plan_sweep", t.us / len(sessions),
+         f"sessions={len(sessions)}")
+
+    with Timer() as t:
+        res_u = sessions[0].run(data, rng=np.random.default_rng(0),
+                                state=states[0])
     t_u = convergence_time(res_u, TARGET)
     # communication up to the convergence point only
     epochs_to_conv = int(np.searchsorted(res_u.times, t_u))
     bits_u = epochs_to_conv * per_epoch_bits
     emit("fig5/uncoded", t.us / epochs, f"t_conv={t_u:.0f}s;bits={bits_u:.3e}")
 
-    for delta in deltas:
+    for delta, sess, state in zip(deltas, sessions[1:], states[1:]):
         with Timer() as t:
-            res_c = cfl_session(fleet, epochs, delta).run(
-                data, rng=np.random.default_rng(0))
+            res_c = sess.run(data, rng=np.random.default_rng(0), state=state)
         g = coding_gain(res_u, res_c, TARGET)
         t_c = convergence_time(res_c, TARGET)
         ep_c = int(np.searchsorted(res_c.times, t_c))

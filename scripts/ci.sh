@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 tests + a 30-epoch quickstart smoke on the
-# Strategy/Session API.
+# Strategy/Session API + a planner-latency budget check.
 #
-#   scripts/ci.sh [--perf]     # --perf additionally runs the session
-#                              # micro-benchmark (slower)
+#   scripts/ci.sh [--perf]     # --perf additionally runs the full session
+#                              # micro-benchmark incl. legacy baselines
+#                              # (slower)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -15,9 +16,13 @@ echo
 echo "== smoke: examples/quickstart.py --epochs 30 (new API) =="
 python examples/quickstart.py --epochs 30
 
+echo
+echo "== smoke: planner latency budget (benchmarks/perf_session --smoke) =="
+python -m benchmarks.perf_session --smoke
+
 if [[ "${1:-}" == "--perf" ]]; then
     echo
-    echo "== perf: scan-jitted Session vs legacy loop =="
+    echo "== perf: planning + scan-jitted Session vs legacy =="
     python -m benchmarks.perf_session --epochs 200
 fi
 

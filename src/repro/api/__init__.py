@@ -6,13 +6,13 @@ runner executes any of them through one scan-jitted epoch engine and returns
 a unified `TraceReport`.
 """
 from .report import TraceReport, coding_gain, convergence_time
-from .session import Session
+from .session import Session, plan_sweep
 from .strategy import (CodedFL, EpochSchedule, GradientCodingFL, Strategy,
                        TrainData, UncodedFL)
 
 __all__ = [
     "TraceReport", "coding_gain", "convergence_time",
-    "Session",
+    "Session", "plan_sweep",
     "Strategy", "TrainData", "EpochSchedule",
     "UncodedFL", "CodedFL", "GradientCodingFL",
 ]

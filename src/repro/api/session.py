@@ -1,4 +1,5 @@
-"""`Session`: the single scan-jitted epoch engine behind every entry point.
+"""`Session`: the single scan-jitted epoch engine behind every entry point,
+plus `plan_sweep`, which batches the planning step across many sessions.
 
 One `Session` replaces the three copy-pasted Python epoch loops that used to
 live in `sim.simulator.run_uncoded` / `run_cfl`, `fed.trainer`, and the
@@ -25,7 +26,8 @@ re-run it with fresh randomness) pay for tracing once.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, Hashable, Optional
+from typing import TYPE_CHECKING, Any, Dict, Hashable, List, Optional, \
+    Sequence
 
 import jax
 import jax.numpy as jnp
@@ -134,3 +136,39 @@ class Session:
             setup_time=sched.setup_time,
             uplink_bits_total=self.strategy.uplink_bits(
                 state, self.fleet, self.epochs))
+
+
+def plan_sweep(sessions: Sequence[Session], data: TrainData) -> List[Any]:
+    """Plan every session's strategy, solving all redundancy problems in ONE
+    batched call.
+
+    Strategies exposing the batched-planning hooks (`plan_request(fleet,
+    data) -> repro.plan.PlanRequest` and `plan_with(fleet, data, plan) ->
+    state`, e.g. `CodedFL`) have their Eq. 14-16 solves collected into a
+    single `repro.plan.solve_redundancy_batched` invocation — a 16-point
+    delta sweep pays for one vectorized solve instead of 16 scalar ones.
+    Everything else (and strategies carrying a pre-solved
+    `redundancy_plan`) falls back to its own `plan`.
+
+    Returns one strategy state per session, in order; pass each to
+    `Session.run(data, state=...)`.
+    """
+    states: List[Any] = [None] * len(sessions)
+    batched: List[int] = []
+    requests = []
+    for i, sess in enumerate(sessions):
+        strat = sess.strategy
+        if hasattr(strat, "plan_request") and hasattr(strat, "plan_with") \
+                and getattr(strat, "redundancy_plan", None) is None:
+            requests.append(strat.plan_request(sess.fleet, data))
+            batched.append(i)
+    if requests:
+        from repro.plan import solve_redundancy_batched
+        plans = solve_redundancy_batched(requests)
+        for i, plan in zip(batched, plans):
+            states[i] = sessions[i].strategy.plan_with(
+                sessions[i].fleet, data, plan)
+    for i, sess in enumerate(sessions):
+        if states[i] is None:
+            states[i] = sess.plan(data)
+    return states

@@ -51,6 +51,7 @@ import numpy as np
 from repro.core import aggregation, cfl
 from repro.core.delay_model import sample_total
 from repro.core.gradient_coding import GradCodingPlan, make_plan
+from repro.core.redundancy import RedundancyPlan
 
 if TYPE_CHECKING:  # annotation-only: avoids the sim -> api -> sim cycle
     from repro.sim.network import FleetSpec
@@ -211,6 +212,9 @@ class CodedFL:
     include_upload_delay: charge the one-time parity upload to the clock
     server_always_returns: ablation — parity gradient always lands
     use_kernel: route matmuls through the Pallas kernels
+    redundancy_plan: pre-solved `RedundancyPlan` (one element of a
+                `repro.plan.solve_redundancy_batched` sweep); `plan` then
+                skips the solve and only encodes
     """
 
     key: jax.Array
@@ -221,11 +225,28 @@ class CodedFL:
     use_kernel: bool = False
     generator: str = "normal"
     label: str = "cfl"
+    redundancy_plan: Optional["RedundancyPlan"] = None
 
     def plan(self, fleet: "FleetSpec", data: TrainData) -> cfl.CFLState:
+        return self.plan_with(fleet, data, self.redundancy_plan)
+
+    # -- batched-planning hooks (see api.session.plan_sweep) ----------------
+
+    def plan_request(self, fleet: "FleetSpec", data: TrainData):
+        """The redundancy problem this strategy would solve in `plan`."""
+        from repro.plan import PlanRequest
+        return PlanRequest(edge=fleet.edge, server=fleet.server,
+                           data_sizes=np.full(data.n, data.ell,
+                                              dtype=np.int64),
+                           c_up=self.c_up, fixed_c=self.fixed_c)
+
+    def plan_with(self, fleet: "FleetSpec", data: TrainData,
+                  plan: Optional["RedundancyPlan"]) -> cfl.CFLState:
+        """`plan` with the redundancy solve already done (or None to solve)."""
         return cfl.setup(self.key, data.xs, data.ys, fleet.edge, fleet.server,
                          fixed_c=self.fixed_c, c_up=self.c_up,
-                         generator=self.generator, use_kernel=self.use_kernel)
+                         generator=self.generator, use_kernel=self.use_kernel,
+                         plan=plan)
 
     def sample_epochs(self, state: cfl.CFLState, fleet: "FleetSpec",
                       epochs: int, rng: np.random.Generator) -> EpochSchedule:

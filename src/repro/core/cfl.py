@@ -55,15 +55,21 @@ class CFLState:
 def setup(key: jax.Array, xs: jax.Array, ys: jax.Array,
           edge: DeviceDelayParams, server: DeviceDelayParams,
           fixed_c: int | None = None, c_up: int | None = None,
-          generator: str = "normal", use_kernel: bool = False) -> CFLState:
+          generator: str = "normal", use_kernel: bool = False,
+          plan: RedundancyPlan | None = None) -> CFLState:
     """Run steps 1-2 of the protocol (optimization + one-time encoding).
 
     xs: (n, ell, d) client-resident features, ys: (n, ell) labels.
     fixed_c: sweep mode — force the coding redundancy instead of optimizing.
+    plan: pre-solved redundancy plan (e.g. one element of a
+          `repro.plan.solve_redundancy_batched` sweep); skips the solve and
+          runs only the encoding step.
     """
     n, ell, _ = xs.shape
     data_sizes = np.full(n, ell, dtype=np.int64)
-    plan = solve_redundancy(edge, server, data_sizes, c_up=c_up, fixed_c=fixed_c)
+    if plan is None:
+        plan = solve_redundancy(edge, server, data_sizes,
+                                c_up=c_up, fixed_c=fixed_c)
 
     w_list = systematic_weights(plan, data_sizes)
     weights = jnp.asarray(np.stack(w_list), dtype=xs.dtype)  # (n, ell)

@@ -97,36 +97,37 @@ def total_cdf(params: DeviceDelayParams, ell, t) -> np.ndarray:
 
     Pr{T <= t} = sum_{k>=2} Pr{K=k} * Pr{T_c <= t - k*tau}   (tau > 0)
                = Pr{T_c <= t}                                 (tau = 0, server)
+
+    `ell` may be scalar, (n,), or carry leading batch axes (..., n) — e.g. an
+    (L, n) grid of candidate loads — and the CDF is evaluated for the whole
+    batch in one vectorized pass (this is what makes the load optimization a
+    single tensor expression instead of one call per integer load).
     """
-    ell = np.broadcast_to(np.asarray(ell, dtype=np.float64), params.a.shape).copy()
+    ell = np.asarray(ell, dtype=np.float64)
+    ell = np.broadcast_to(ell, np.broadcast_shapes(ell.shape, params.a.shape))
     t = float(t)
-    out = np.zeros(params.n, dtype=np.float64)
 
     comm = params.tau > 0
-    # Server-style devices: compute-only.
-    if np.any(~comm):
-        out[~comm] = compute_cdf(
-            DeviceDelayParams(params.a[~comm], params.mu[~comm],
-                              params.tau[~comm], params.p[~comm]),
-            ell[~comm], t)
-    if np.any(comm):
-        sub = DeviceDelayParams(params.a[comm], params.mu[comm],
-                                params.tau[comm], params.p[comm])
-        ks = np.arange(2, 2 + K_MAX, dtype=np.float64)  # (K,)
-        pmf = _nbinom_pmf(sub.p[:, None], ks[None, :])  # (n_c, K)
-        # residual time after k transmissions: s_k = t - k * tau_i
-        t_resid = t - ks[None, :] * sub.tau[:, None]  # (n_c, K)
-        shift = (ell[comm] * sub.a)[:, None]
-        gamma = (sub.mu / np.maximum(ell[comm], 1.0))[:, None]  # ell=0 masked below
-        s = t_resid - shift
-        cdf_k = np.where(s > 0,
-                         -np.expm1(-np.minimum(gamma * np.maximum(s, 0.0), 700.0)),
-                         0.0)
-        # ell == 0 rows: compute CDF is a step at zero -> 1 whenever t_resid >= 0
-        zero_load = (ell[comm] <= 0)[:, None]
-        cdf_k = np.where(zero_load, (t_resid >= 0).astype(np.float64), cdf_k)
-        out[comm] = np.sum(pmf * cdf_k, axis=1)
-    return out
+    # compute-only CDF, used directly for tau == 0 (server-style) devices
+    base = compute_cdf(params, ell, t)  # (..., n)
+    if not np.any(comm):
+        return base
+
+    ks = np.arange(2, 2 + K_MAX, dtype=np.float64)      # (K,)
+    pmf = _nbinom_pmf(params.p[:, None], ks[None, :])   # (n, K)
+    # residual time after k transmissions: s_k = t - k * tau_i
+    t_resid = t - ks[None, :] * params.tau[:, None]     # (n, K)
+    shift = (ell * params.a)[..., None]                 # (..., n, 1)
+    gamma = (params.mu / np.maximum(ell, 1.0))[..., None]  # ell=0 masked below
+    s = t_resid - shift                                 # (..., n, K)
+    cdf_k = np.where(s > 0,
+                     -np.expm1(-np.minimum(gamma * np.maximum(s, 0.0), 700.0)),
+                     0.0)
+    # ell == 0 rows: compute CDF is a step at zero -> 1 whenever t_resid >= 0
+    zero_load = (ell <= 0)[..., None]
+    cdf_k = np.where(zero_load, (t_resid >= 0).astype(np.float64), cdf_k)
+    mix = np.sum(pmf * cdf_k, axis=-1)                  # (..., n)
+    return np.where(comm, mix, base)
 
 
 def sample_total(params: DeviceDelayParams, ell, rng: np.random.Generator,

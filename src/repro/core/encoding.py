@@ -12,9 +12,11 @@ of the full decentralized dataset in which G, W, X, y all stay unknown to the
 server.  Puncturing (w=1 rows that the client never processes locally) is
 implicit in the weight vector.
 
-Encoding is a batched matmul; the Pallas kernel in `repro.kernels.encode`
-fuses the diagonal scaling into the matmul's LHS load. This module is the
-pure-JAX reference path used by default on CPU.
+Encoding is a batched matmul; the Pallas path in `repro.kernels.encode`
+fuses generator sampling + diagonal scaling + matmul accumulation end-to-end,
+streamed one client at a time.  This module is the pure-JAX reference path
+used by default on CPU; its fleet encoder streams clients through a
+`lax.scan` accumulation so the (n, c, d) parity stack never materializes.
 """
 from __future__ import annotations
 
@@ -64,6 +66,32 @@ def encode_client(g: jax.Array, w: jax.Array, x: jax.Array, y: jax.Array,
     return ClientParity(x_parity=xp, y_parity=yp)
 
 
+def encode_fleet_streamed(keys: jax.Array, xs: jax.Array, ys: jax.Array,
+                          weights: jax.Array, c: int, kind: str,
+                          client_encode) -> tuple[jax.Array, jax.Array]:
+    """Shared streaming core behind both fleet encoders.
+
+    Clients are streamed through a `lax.scan` accumulation: one (c, ell)
+    generator and one (c, d+1) accumulator live at a time — never the
+    (n, c, ell) generator stack or the (n, c, d) parity stack (peak memory
+    matters for large-c sweeps).  The labels ride along as an extra feature
+    column so X~ and y~ come out of one fused `client_encode(g, w, x)` call
+    per client (pure matmul here, Pallas kernel in `repro.kernels.encode`).
+    """
+    n, ell, d = xs.shape
+    xa = jnp.concatenate([xs, ys[..., None]], axis=-1)  # (n, ell, d+1)
+
+    def one(acc, inp):
+        k, x, w = inp
+        g = generator_matrix(k, c, ell, kind=kind, dtype=xs.dtype)
+        return acc + client_encode(g, w, x), None
+
+    acc, _ = jax.lax.scan(one, jnp.zeros((c, d + 1), dtype=xs.dtype),
+                          (keys, xa, weights))
+    return acc[:, :d], acc[:, d]
+
+
+@partial(jax.jit, static_argnames=("c", "kind", "use_kernel"))
 def encode_fleet(key: jax.Array, xs: jax.Array, ys: jax.Array,
                  weights: jax.Array, c: int, kind: str = "normal",
                  use_kernel: bool = False) -> tuple[jax.Array, jax.Array]:
@@ -75,15 +103,13 @@ def encode_fleet(key: jax.Array, xs: jax.Array, ys: jax.Array,
     Returns (X~ (c, d), y~ (c,)) = sums of per-client parities.
 
     Each client uses an independent fold of `key` — mirroring the protocol
-    where G_i is drawn locally and never shared.
+    where G_i is drawn locally and never shared; both paths stream through
+    `encode_fleet_streamed` and therefore draw identical generators.
     """
-    n = xs.shape[0]
-    keys = jax.random.split(key, n)
-
-    def one(k, x, y, w):
-        g = generator_matrix(k, c, x.shape[0], kind=kind, dtype=x.dtype)
-        par = encode_client(g, w, x, y, use_kernel=use_kernel)
-        return par.x_parity, par.y_parity
-
-    xps, yps = jax.vmap(one)(keys, xs, ys, weights)
-    return jnp.sum(xps, axis=0), jnp.sum(yps, axis=0)
+    keys = jax.random.split(key, xs.shape[0])
+    if use_kernel:
+        from repro.kernels.encode import ops as encode_ops
+        return encode_fleet_streamed(keys, xs, ys, weights, c, kind,
+                                     encode_ops.encode_parity)
+    return encode_fleet_streamed(keys, xs, ys, weights, c, kind,
+                                 lambda g, w, x: g @ (w[:, None] * x))

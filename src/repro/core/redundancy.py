@@ -9,12 +9,17 @@ find:
     processes each epoch == row dimension of every client generator matrix).
 
 t* = argmin_t { m <= E[R(t; ell*(t))] <= m + eps }  (Eq. 16); the aggregate
-expected return E[R] = sum_i ell*_i(t) Pr{T_i <= t} is nondecreasing in t, so
-t* is found by bisection to a relative tolerance.
+expected return E[R] = sum_i ell*_i(t) Pr{T_i <= t} is nondecreasing in t.
 
 The module also supports a *fixed redundancy* mode used by the paper's Fig. 2
 and Fig. 5 sweeps: given c (equivalently delta = c/m), cap the server load at
 c and solve only for t*.
+
+`solve_redundancy` is now a thin single-fleet shim over the vectorized grid
+solver in `repro.plan.solver` — sweeps should call
+`repro.plan.solve_redundancy_batched` directly and plan every configuration
+in one jitted call.  The seed's scalar bisection stack survives verbatim in
+`repro.plan.reference` for parity tests.
 """
 from __future__ import annotations
 
@@ -23,18 +28,19 @@ import dataclasses
 import numpy as np
 
 from .delay_model import DeviceDelayParams
-from .returns import expected_return, optimal_loads
 
 
 @dataclasses.dataclass(frozen=True)
 class RedundancyPlan:
     """Output of the two-step optimization.
 
-    loads:        (n,) systematic points each edge device processes per epoch
-    c:            parity rows processed by the server per epoch (coding redundancy)
-    t_star:       epoch deadline in seconds
-    p_return:     (n+1,) Pr{T_i <= t*} at the optimized loads (server last)
-    expected_agg: aggregate expected return at t* (should be ~ m)
+    loads:           (n,) systematic points each edge device processes/epoch
+    c:               parity rows processed by the server per epoch
+                     (coding redundancy)
+    t_star:          epoch deadline in seconds
+    p_return:        (n+1,) Pr{T_i <= t*} at the optimized loads (server last)
+    expected_agg:    aggregate expected return at t* (should be ~ m)
+    loads_cap_total: m = total edge-resident points (the delta denominator)
     """
 
     loads: np.ndarray
@@ -42,13 +48,16 @@ class RedundancyPlan:
     t_star: float
     p_return: np.ndarray
     expected_agg: float
+    loads_cap_total: int
 
     @property
     def delta(self) -> float:
         """Redundancy metric delta = c / m over the edge devices' total data."""
+        if self.loads_cap_total <= 0:
+            raise ValueError(
+                "delta is undefined: loads_cap_total must be the positive "
+                f"total edge dataset size m, got {self.loads_cap_total}")
         return float(self.c) / float(self.loads_cap_total)
-
-    loads_cap_total: int = 0
 
 
 def _fleet_with_server(edge: DeviceDelayParams,
@@ -63,20 +72,11 @@ def _fleet_with_server(edge: DeviceDelayParams,
     )
 
 
-def aggregate_return(fleet: DeviceDelayParams, caps: np.ndarray,
-                     t: float) -> tuple[float, np.ndarray, np.ndarray]:
-    """max_load E[R(t)] plus the argmax loads and per-device return probs."""
-    loads, vals = optimal_loads(fleet, caps, t)
-    from .delay_model import total_cdf
-    probs = total_cdf(fleet, loads, t)
-    return float(np.sum(vals)), loads, probs
-
-
 def solve_redundancy(edge: DeviceDelayParams, server: DeviceDelayParams,
                      data_sizes: np.ndarray, c_up: int | None = None,
                      eps_rel: float = 1e-3, t_hi: float | None = None,
                      fixed_c: int | None = None) -> RedundancyPlan:
-    """Run the two-step optimization.
+    """Run the two-step optimization for ONE fleet (shim over `repro.plan`).
 
     edge:       delay params of the n client devices
     server:     delay params of the central server (tau=0: no comm leg)
@@ -86,49 +86,10 @@ def solve_redundancy(edge: DeviceDelayParams, server: DeviceDelayParams,
                 (delta-sweep mode for Fig. 2 / Fig. 5); the server cap is
                 fixed_c and the target return stays m.
     """
-    data_sizes = np.asarray(data_sizes, dtype=np.int64)
-    m = int(data_sizes.sum())
-    if c_up is None:
-        c_up = m
-    server_cap = int(fixed_c) if fixed_c is not None else int(c_up)
-    fleet = _fleet_with_server(edge, server)
-    caps = np.concatenate([data_sizes, [server_cap]])
-
-    # --- bracket t*: find t_hi with E[R] >= m ------------------------------
-    if t_hi is None:
-        t_hi = float(np.max(fleet.mean_total(caps))) + 1.0
-    t_lo = 0.0
-    agg, loads, probs = aggregate_return(fleet, caps, t_hi)
-    guard = 0
-    while agg < m:
-        t_hi *= 2.0
-        agg, loads, probs = aggregate_return(fleet, caps, t_hi)
-        guard += 1
-        if guard > 60:
-            raise RuntimeError(
-                "cannot reach aggregate expected return m: the fleet cannot "
-                f"return {m} points in finite time (best {agg:.1f})")
-
-    # --- bisection on t (E[R] is nondecreasing in t) ------------------------
-    for _ in range(64):
-        t_mid = 0.5 * (t_lo + t_hi)
-        agg_mid, loads_mid, probs_mid = aggregate_return(fleet, caps, t_mid)
-        if agg_mid >= m:
-            t_hi, agg, loads, probs = t_mid, agg_mid, loads_mid, probs_mid
-        else:
-            t_lo = t_mid
-        if (t_hi - t_lo) <= eps_rel * max(t_hi, 1e-12):
-            break
-
-    c = int(loads[-1]) if fixed_c is None else int(fixed_c)
-    return RedundancyPlan(
-        loads=loads[:-1].astype(np.int64),
-        c=c,
-        t_star=float(t_hi),
-        p_return=probs,
-        expected_agg=float(agg),
-        loads_cap_total=m,
-    )
+    from repro.plan.solver import PlanRequest, solve_redundancy_batched
+    req = PlanRequest(edge=edge, server=server, data_sizes=data_sizes,
+                      c_up=c_up, fixed_c=fixed_c, t_hi=t_hi)
+    return solve_redundancy_batched([req], eps_rel=eps_rel)[0]
 
 
 def systematic_weights(plan: RedundancyPlan, data_sizes: np.ndarray) -> list[np.ndarray]:

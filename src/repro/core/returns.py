@@ -10,7 +10,10 @@ Step 1 of the two-step optimization (Eqs. 14-15):
 ell~ is an integer number of training points; the per-device cap is the local
 dataset size ell_i (or c_up for the server's parity budget).  Loads are small
 (hundreds to a few thousand) so an exact vectorized grid search is both exact
-and fast — no continuous relaxation.
+and fast — the whole (L, n) expected-return grid is one `total_cdf` call, not
+one call per integer load (the seed's loop survives as
+`repro.plan.reference.optimal_loads_loop` for parity tests and benchmark
+baselines; the batched multi-fleet solver lives in `repro.plan.solver`).
 """
 from __future__ import annotations
 
@@ -20,8 +23,11 @@ from .delay_model import DeviceDelayParams, total_cdf
 
 
 def expected_return(params: DeviceDelayParams, ell, t) -> np.ndarray:
-    """E[R_i(t; ell)] = ell * Pr{T_i <= t}, vectorized over devices."""
-    ell = np.broadcast_to(np.asarray(ell, dtype=np.float64), params.a.shape)
+    """E[R_i(t; ell)] = ell * Pr{T_i <= t}, vectorized over devices and any
+    leading batch of loads (scalar, (n,), or (..., n) — e.g. an (L, 1) column
+    broadcasts to the full (L, n) load grid in one shot)."""
+    ell = np.asarray(ell, dtype=np.float64)
+    ell = np.broadcast_to(ell, np.broadcast_shapes(ell.shape, params.a.shape))
     return ell * total_cdf(params, ell, t)
 
 
@@ -31,9 +37,9 @@ def optimal_loads(params: DeviceDelayParams, caps: np.ndarray, t: float,
 
     Returns (ell_star (n,) int array, expected return at ell_star (n,)).
 
-    Grid-searches all integer loads at once: builds an (n, L+1) matrix of
-    expected returns where L = max cap.  Memory is chunked along the load
-    axis so server caps of ~10^5 stay cheap.
+    Grid-searches all integer loads at once: each chunk evaluates an
+    (L, n) expected-return matrix in ONE vectorized call.  Memory is
+    chunked along the load axis so server caps of ~10^5 stay cheap.
     """
     caps = np.asarray(caps, dtype=np.int64)
     n = params.n
@@ -44,7 +50,7 @@ def optimal_loads(params: DeviceDelayParams, caps: np.ndarray, t: float,
         hi = min(lo + chunk - 1, l_max)
         loads = np.arange(lo, hi + 1, dtype=np.float64)  # (L,)
         # E[R] for every device at every load in this chunk: (L, n)
-        vals = np.stack([expected_return(params, l, t) for l in loads], axis=0)
+        vals = expected_return(params, loads[:, None], t)
         # mask loads above each device's cap
         mask = loads[:, None] <= caps[None, :]
         vals = np.where(mask, vals, -np.inf)

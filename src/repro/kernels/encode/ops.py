@@ -1,5 +1,19 @@
-"""jit'd wrapper for the fused parity-encoding kernel (interpret on CPU)."""
+"""jit'd wrappers for the fused parity-encoding kernels (interpret on CPU).
+
+Two entry points:
+
+  * `encode_parity` — one client's P = G (W X) with the diagonal weighting
+    fused into the matmul (the original kernel).
+  * `encode_fleet`  — the whole fleet's composite parity in one streamed
+    pass: per client, sample the private generator G_i, fuse the Eq.-17
+    weighting into the parity matmul, and accumulate into the running
+    (c, d+1) composite.  The streaming itself is shared with the reference
+    path (`core.encoding.encode_fleet_streamed`) so both paths draw
+    identical G_i; only the per-client matmul differs (Pallas here).
+"""
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 
@@ -18,4 +32,23 @@ def encode_parity(g: jax.Array, w: jax.Array, x: jax.Array,
                             interpret=force_interpret or not _on_tpu())
 
 
+@partial(jax.jit, static_argnames=("c", "kind", "block", "force_interpret"))
+def encode_fleet(keys: jax.Array, xs: jax.Array, ys: jax.Array,
+                 weights: jax.Array, c: int, kind: str = "normal",
+                 block=_k.DEFAULT_BLOCK,
+                 force_interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Streamed fused fleet encoding: (X~ (c, d), y~ (c,)).
+
+    keys: (n, 2) per-client PRNG keys (same split layout as
+          `core.encoding.encode_fleet`, so both paths draw identical G_i)
+    xs: (n, ell, d), ys: (n, ell), weights: (n, ell)
+    """
+    from repro.core.encoding import encode_fleet_streamed
+
+    return encode_fleet_streamed(
+        keys, xs, ys, weights, c, kind,
+        partial(encode_parity, block=block, force_interpret=force_interpret))
+
+
 reference = _ref.encode_parity
+reference_fleet = _ref.encode_fleet

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused weighted parity encoding."""
+"""Pure-jnp oracles for the fused weighted parity encoding."""
 import jax
 import jax.numpy as jnp
 
@@ -6,3 +6,15 @@ import jax.numpy as jnp
 def encode_parity(g: jax.Array, w: jax.Array, x: jax.Array) -> jax.Array:
     """P = G @ (diag(w) X).  g: (C, L), w: (L,), x: (L, D) -> (C, D)."""
     return g @ (w[:, None] * x)
+
+
+def encode_fleet(gs: jax.Array, ws: jax.Array, xs: jax.Array,
+                 ys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Composite parity from an EXPLICIT generator stack (test oracle only).
+
+    gs: (n, c, ell), ws: (n, ell), xs: (n, ell, d), ys: (n, ell)
+    -> (X~ (c, d), y~ (c,)) = (sum_i G_i W_i X_i, sum_i G_i W_i y_i)
+    """
+    xp = jnp.einsum("ncl,nl,nld->cd", gs, ws, xs)
+    yp = jnp.einsum("ncl,nl,nl->c", gs, ws, ys)
+    return xp, yp

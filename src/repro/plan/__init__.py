@@ -1,0 +1,16 @@
+"""Batched redundancy-planning subsystem (paper §III-B).
+
+`solve_redundancy_batched` evaluates the full `(t_grid, n, L)` expected-
+return tensor in one jitted shot and plans a whole delta/fleet sweep per
+call; `PlanRequest` describes one fleet + parity budget.  The legacy
+scalar stack survives in `repro.plan.reference` for parity tests and
+benchmark baselines.  Single-fleet callers keep using the thin shims
+`core.redundancy.solve_redundancy` / `core.cfl.setup`, which route here.
+"""
+from .solver import (GRID_POINTS, MAX_DOUBLINGS, MAX_ROUNDS, PlanRequest,
+                     solve_redundancy_batched)
+
+__all__ = [
+    "PlanRequest", "solve_redundancy_batched",
+    "GRID_POINTS", "MAX_ROUNDS", "MAX_DOUBLINGS",
+]

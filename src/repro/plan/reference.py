@@ -1,0 +1,151 @@
+"""The seed repo's host-side scalar planning stack, preserved verbatim.
+
+This is the original two-step optimization exactly as it shipped before the
+vectorized grid solver in `repro.plan.solver` replaced it: a Python loop that
+calls the analytic CDF once per integer load per chunk, inside a 64-iteration
+bisection on the epoch deadline.  It is kept for two jobs only:
+
+  * the oracle in the planner parity tests (`tests/test_plan_solver.py`) —
+    the grid solver must reproduce its `t*`, `loads`, and `c`;
+  * the "legacy" baseline in `benchmarks/perf_session.py`'s plan-timing
+    section, so the reported speedup is measured against the real seed
+    algorithm rather than an already-vectorized stand-in.
+
+Nothing in the production path imports this module.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.delay_model import (K_MAX, DeviceDelayParams, _nbinom_pmf,
+                                    compute_cdf)
+from repro.core.redundancy import RedundancyPlan, _fleet_with_server
+
+
+def total_cdf_loop(params: DeviceDelayParams, ell, t) -> np.ndarray:
+    """The seed's Pr{T_i <= t}: one (n,)-shaped evaluation per call, with
+    per-call comm/no-comm sub-fleet construction (since vectorized away in
+    `core.delay_model.total_cdf`; kept verbatim so the baseline timing is
+    the seed's, not the refactor's)."""
+    ell = np.broadcast_to(np.asarray(ell, dtype=np.float64),
+                          params.a.shape).copy()
+    t = float(t)
+    out = np.zeros(params.n, dtype=np.float64)
+
+    comm = params.tau > 0
+    # Server-style devices: compute-only.
+    if np.any(~comm):
+        out[~comm] = compute_cdf(
+            DeviceDelayParams(params.a[~comm], params.mu[~comm],
+                              params.tau[~comm], params.p[~comm]),
+            ell[~comm], t)
+    if np.any(comm):
+        sub = DeviceDelayParams(params.a[comm], params.mu[comm],
+                                params.tau[comm], params.p[comm])
+        ks = np.arange(2, 2 + K_MAX, dtype=np.float64)  # (K,)
+        pmf = _nbinom_pmf(sub.p[:, None], ks[None, :])  # (n_c, K)
+        # residual time after k transmissions: s_k = t - k * tau_i
+        t_resid = t - ks[None, :] * sub.tau[:, None]  # (n_c, K)
+        shift = (ell[comm] * sub.a)[:, None]
+        gamma = (sub.mu / np.maximum(ell[comm], 1.0))[:, None]
+        s = t_resid - shift
+        cdf_k = np.where(
+            s > 0,
+            -np.expm1(-np.minimum(gamma * np.maximum(s, 0.0), 700.0)),
+            0.0)
+        # ell == 0 rows: compute CDF is a step at zero
+        zero_load = (ell[comm] <= 0)[:, None]
+        cdf_k = np.where(zero_load, (t_resid >= 0).astype(np.float64), cdf_k)
+        out[comm] = np.sum(pmf * cdf_k, axis=1)
+    return out
+
+
+def expected_return(params: DeviceDelayParams, ell, t) -> np.ndarray:
+    """The seed's E[R_i(t; ell)] = ell * Pr{T_i <= t} (scalar-load calls)."""
+    ell = np.broadcast_to(np.asarray(ell, dtype=np.float64), params.a.shape)
+    return ell * total_cdf_loop(params, ell, t)
+
+
+def optimal_loads_loop(params: DeviceDelayParams, caps: np.ndarray, t: float,
+                       chunk: int = 4096) -> tuple[np.ndarray, np.ndarray]:
+    """The seed's per-integer-load grid search (one CDF call per load)."""
+    caps = np.asarray(caps, dtype=np.int64)
+    n = params.n
+    l_max = int(caps.max())
+    best_val = np.zeros(n, dtype=np.float64)
+    best_ell = np.zeros(n, dtype=np.int64)
+    for lo in range(1, l_max + 1, chunk):
+        hi = min(lo + chunk - 1, l_max)
+        loads = np.arange(lo, hi + 1, dtype=np.float64)  # (L,)
+        # E[R] for every device at every load in this chunk: (L, n)
+        vals = np.stack([expected_return(params, l, t) for l in loads], axis=0)
+        # mask loads above each device's cap
+        mask = loads[:, None] <= caps[None, :]
+        vals = np.where(mask, vals, -np.inf)
+        idx = np.argmax(vals, axis=0)  # (n,)
+        chunk_best = vals[idx, np.arange(n)]
+        better = chunk_best > best_val
+        best_val = np.where(better, chunk_best, best_val)
+        best_ell = np.where(better, loads[idx].astype(np.int64), best_ell)
+    return best_ell, best_val
+
+
+def aggregate_return_loop(fleet: DeviceDelayParams, caps: np.ndarray,
+                          t: float) -> tuple[float, np.ndarray, np.ndarray]:
+    """max_load E[R(t)] plus the argmax loads and per-device return probs."""
+    loads, vals = optimal_loads_loop(fleet, caps, t)
+    probs = total_cdf_loop(fleet, loads, t)
+    return float(np.sum(vals)), loads, probs
+
+
+def solve_redundancy_reference(edge: DeviceDelayParams,
+                               server: DeviceDelayParams,
+                               data_sizes: np.ndarray, c_up: int | None = None,
+                               eps_rel: float = 1e-3,
+                               t_hi: float | None = None,
+                               fixed_c: int | None = None) -> RedundancyPlan:
+    """The seed's two-step optimization: bracket + 64-iteration bisection,
+    re-solving every device's integer load at every probed deadline."""
+    data_sizes = np.asarray(data_sizes, dtype=np.int64)
+    m = int(data_sizes.sum())
+    if c_up is None:
+        c_up = m
+    server_cap = int(fixed_c) if fixed_c is not None else int(c_up)
+    fleet = _fleet_with_server(edge, server)
+    caps = np.concatenate([data_sizes, [server_cap]])
+
+    # --- bracket t*: find t_hi with E[R] >= m ------------------------------
+    if t_hi is None:
+        t_hi = float(np.max(fleet.mean_total(caps))) + 1.0
+    t_lo = 0.0
+    agg, loads, probs = aggregate_return_loop(fleet, caps, t_hi)
+    guard = 0
+    while agg < m:
+        t_hi *= 2.0
+        agg, loads, probs = aggregate_return_loop(fleet, caps, t_hi)
+        guard += 1
+        if guard > 60:
+            raise RuntimeError(
+                "cannot reach aggregate expected return m: the fleet cannot "
+                f"return {m} points in finite time (best {agg:.1f})")
+
+    # --- bisection on t (E[R] is nondecreasing in t) ------------------------
+    for _ in range(64):
+        t_mid = 0.5 * (t_lo + t_hi)
+        agg_mid, loads_mid, probs_mid = aggregate_return_loop(fleet, caps, t_mid)
+        if agg_mid >= m:
+            t_hi, agg, loads, probs = t_mid, agg_mid, loads_mid, probs_mid
+        else:
+            t_lo = t_mid
+        if (t_hi - t_lo) <= eps_rel * max(t_hi, 1e-12):
+            break
+
+    c = int(loads[-1]) if fixed_c is None else int(fixed_c)
+    return RedundancyPlan(
+        loads=loads[:-1].astype(np.int64),
+        c=c,
+        t_star=float(t_hi),
+        p_return=probs,
+        expected_agg=float(agg),
+        loads_cap_total=m,
+    )

@@ -25,6 +25,19 @@ def test_generator_matrix_bernoulli():
     np.testing.assert_allclose(np.asarray(gram), np.eye(32), atol=0.15)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_generator_matrix_bernoulli_dtype_regression(dtype):
+    """Regression: kind="bernoulli" must honor the requested float dtype and
+    produce exactly +-1 values (jax.random.rademacher defaults to int32 —
+    an int generator would silently upcast the whole encoding matmul)."""
+    g = generator_matrix(jax.random.PRNGKey(3), 32, 16, kind="bernoulli",
+                         dtype=dtype)
+    assert g.dtype == dtype
+    assert jnp.issubdtype(g.dtype, jnp.floating)
+    vals = set(np.unique(np.asarray(g, dtype=np.float32)))
+    assert vals <= {-1.0, 1.0}
+
+
 def test_generator_matrix_unknown_kind():
     with pytest.raises(ValueError):
         generator_matrix(jax.random.PRNGKey(0), 4, 4, kind="nope")
@@ -67,6 +80,24 @@ def test_encode_fleet_is_sum_of_clients():
         acc_y += np.asarray(g @ (ws[i] * ys[i]))
     np.testing.assert_allclose(np.asarray(xp), acc_x, rtol=2e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(yp), acc_y, rtol=2e-4, atol=1e-5)
+
+
+def test_encode_fleet_kernel_path_matches_reference():
+    """The streamed kernels/encode fleet path draws the SAME per-client
+    generators as the scan reference and produces the same composite."""
+    key = jax.random.PRNGKey(4)
+    n, ell, d, c = 3, 24, 10, 12
+    xs = jax.random.normal(key, (n, ell, d))
+    ys = jax.random.normal(jax.random.fold_in(key, 1), (n, ell))
+    ws = jax.random.uniform(jax.random.fold_in(key, 2), (n, ell),
+                            minval=0.2, maxval=1.0)
+    kx = jax.random.PRNGKey(17)
+    xp_ref, yp_ref = encode_fleet(kx, xs, ys, ws, c)
+    xp_k, yp_k = encode_fleet(kx, xs, ys, ws, c, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(xp_k), np.asarray(xp_ref),
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(yp_k), np.asarray(yp_ref),
+                               rtol=2e-4, atol=1e-5)
 
 
 @settings(max_examples=10, deadline=None)

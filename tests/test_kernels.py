@@ -102,6 +102,29 @@ def test_encode_property(c, l, d):
                                atol=1e-3)
 
 
+def test_encode_fleet_matches_explicit_generator_oracle():
+    """The streamed fleet path (no generator stack materialized) equals the
+    explicit (n, c, ell) generator-stack oracle drawn with the same keys."""
+    from repro.core.encoding import generator_matrix
+
+    key = jax.random.PRNGKey(21)
+    n, ell, d, c = 3, 20, 9, 11
+    xs = jax.random.normal(key, (n, ell, d))
+    ys = jax.random.normal(jax.random.fold_in(key, 1), (n, ell))
+    ws = jax.random.uniform(jax.random.fold_in(key, 2), (n, ell),
+                            minval=0.2, maxval=1.0)
+    keys = jax.random.split(jax.random.PRNGKey(33), n)
+    got_x, got_y = en_ops.encode_fleet(keys, xs, ys, ws, c,
+                                       block=(16, 16, 16))
+    gs = jnp.stack([generator_matrix(k, c, ell, dtype=xs.dtype)
+                    for k in keys])
+    want_x, want_y = en_ops.reference_fleet(gs, ws, xs, ys)
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x),
+                               rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=2e-4, atol=1e-3)
+
+
 # ---------------------------------------------------------------------------
 # ssd: intra-chunk state-space dual kernel
 # ---------------------------------------------------------------------------

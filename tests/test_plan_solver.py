@@ -1,0 +1,184 @@
+"""Parity + property tests for the batched grid planner (`repro.plan`).
+
+The oracle is the seed's scalar stack, preserved verbatim in
+`repro.plan.reference`.  Randomized fleets avoid the full-saturation corner
+(parity budget ~ 0 with target m): there t* sits on the CDF-saturation
+asymptote where the reference's answer is an artifact of float64 rounding,
+and the solvers agree on loads but only loosely on t* (covered separately
+by `test_fixed_c_zero_saturating_regime`).
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or a deterministic fallback
+
+from repro.core.delay_model import DeviceDelayParams, total_cdf
+from repro.core.redundancy import RedundancyPlan, solve_redundancy
+from repro.plan import PlanRequest, solve_redundancy_batched
+from repro.plan.reference import solve_redundancy_reference
+
+
+def _random_fleet(rng: np.random.Generator, n: int):
+    a = rng.uniform(1e-3, 5e-2, n)
+    mu = (2.0 / a) * rng.uniform(0.5, 2.0, n)
+    tau = rng.uniform(1e-3, 5e-2, n)
+    p = rng.uniform(0.0, 0.3, n)
+    edge = DeviceDelayParams(a, mu, tau, p)
+    sa = np.array([a.min() / 10.0])
+    server = DeviceDelayParams(sa, 2.0 / sa, np.zeros(1), np.zeros(1))
+    return edge, server
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 8), ell=st.integers(8, 60),
+       mode=st.sampled_from(["free", "fixed"]), seed=st.integers(0, 10**6))
+def test_batched_solver_matches_reference(n, ell, mode, seed):
+    """Property parity: grid solver == seed bisection on randomized fleets
+    (t* to 1e-3 relative, loads and c exactly)."""
+    rng = np.random.default_rng(seed)
+    edge, server = _random_fleet(rng, n)
+    sizes = rng.integers(ell // 2 + 1, ell + 1, size=n)
+    m = int(sizes.sum())
+    # keep the parity budget >= 10% of m: avoids the saturation asymptote
+    kw = {"fixed_c": int(rng.integers(m // 10 + 1, m + 1))} \
+        if mode == "fixed" else \
+        {"c_up": int(rng.integers(m // 10 + 1, m + 1))}
+    ref = solve_redundancy_reference(edge, server, sizes, eps_rel=1e-4, **kw)
+    new = solve_redundancy_batched(
+        [PlanRequest(edge, server, sizes, **kw)], eps_rel=1e-4)[0]
+    np.testing.assert_allclose(new.t_star, ref.t_star, rtol=1e-3)
+    np.testing.assert_array_equal(new.loads, ref.loads)
+    assert new.c == ref.c
+    np.testing.assert_allclose(new.p_return, ref.p_return,
+                               rtol=1e-3, atol=1e-6)
+    np.testing.assert_allclose(new.expected_agg, ref.expected_agg, rtol=1e-3)
+    assert new.loads_cap_total == ref.loads_cap_total == m
+
+
+def test_batched_matches_single_calls():
+    """One batched call over heterogeneous requests == per-request solves."""
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(6):
+        edge, server = _random_fleet(rng, 6)
+        sizes = np.full(6, 40 + 4 * i)
+        kw = {"fixed_c": 30 + 10 * i} if i % 2 else {"c_up": 60 + 10 * i}
+        reqs.append(PlanRequest(edge, server, sizes, **kw))
+    batch = solve_redundancy_batched(reqs)
+    for req, got in zip(reqs, batch):
+        one = solve_redundancy_batched([req])[0]
+        np.testing.assert_allclose(got.t_star, one.t_star, rtol=1e-9)
+        np.testing.assert_array_equal(got.loads, one.loads)
+        assert got.c == one.c
+        np.testing.assert_allclose(got.p_return, one.p_return,
+                                   rtol=1e-9, atol=1e-12)
+
+
+def test_shim_routes_to_grid_solver():
+    """`core.redundancy.solve_redundancy` is a thin shim over the batched
+    solver: identical plan fields for the same request."""
+    rng = np.random.default_rng(3)
+    edge, server = _random_fleet(rng, 5)
+    sizes = np.full(5, 50)
+    shim = solve_redundancy(edge, server, sizes, fixed_c=80)
+    direct = solve_redundancy_batched(
+        [PlanRequest(edge, server, sizes, fixed_c=80)])[0]
+    assert shim.t_star == direct.t_star
+    np.testing.assert_array_equal(shim.loads, direct.loads)
+    assert shim.c == direct.c and shim.expected_agg == direct.expected_agg
+
+
+def test_fixed_c_zero_saturating_regime():
+    """fixed_c = 0 (delta = 0): every device must saturate, the deadline is
+    finite, and the loads equal the caps (matching the reference's loads
+    even though t* sits on the saturation asymptote)."""
+    rng = np.random.default_rng(7)
+    edge, server = _random_fleet(rng, 4)
+    sizes = np.full(4, 30)
+    ref = solve_redundancy_reference(edge, server, sizes, fixed_c=0)
+    new = solve_redundancy_batched(
+        [PlanRequest(edge, server, sizes, fixed_c=0)])[0]
+    assert new.c == 0 and np.isfinite(new.t_star) and new.t_star > 0
+    np.testing.assert_array_equal(new.loads, sizes)
+    np.testing.assert_array_equal(new.loads, ref.loads)
+    assert new.expected_agg >= sizes.sum()
+
+
+def test_p_return_consistent_with_total_cdf():
+    """p_return must be bit-identical to total_cdf at (loads, t*): the
+    Eq.-17 weights sqrt(1 - p) amplify any last-ulp drift when p ~ 1."""
+    rng = np.random.default_rng(11)
+    edge, server = _random_fleet(rng, 6)
+    sizes = np.full(6, 40)
+    plan = solve_redundancy_batched(
+        [PlanRequest(edge, server, sizes, c_up=100)])[0]
+    np.testing.assert_array_equal(
+        plan.p_return[:-1], total_cdf(edge, plan.loads, plan.t_star))
+
+
+def test_infeasible_batch_raises():
+    """A fleet that cannot reach the target must raise (legacy contract),
+    naming the offending request."""
+    edge = DeviceDelayParams(a=np.full(2, 1e12), mu=np.full(2, 1e-12),
+                             tau=np.ones(2), p=np.full(2, 0.99))
+    server = DeviceDelayParams(a=np.array([1e12]), mu=np.array([1e-12]),
+                               tau=np.zeros(1), p=np.zeros(1))
+    with pytest.raises(RuntimeError):
+        solve_redundancy_batched(
+            [PlanRequest(edge, server, np.full(2, 10), c_up=5, t_hi=1.0)])
+
+
+def test_plan_request_validates_server():
+    edge, server = _random_fleet(np.random.default_rng(0), 3)
+    with pytest.raises(ValueError):  # two servers
+        PlanRequest(edge, edge, np.full(3, 10))
+    comm_server = DeviceDelayParams(np.ones(1), np.ones(1), np.ones(1),
+                                    np.zeros(1))
+    with pytest.raises(ValueError):  # server with a communication leg
+        PlanRequest(edge, comm_server, np.full(3, 10))
+    with pytest.raises(ValueError):  # data_sizes shape mismatch
+        PlanRequest(edge, server, np.full(4, 10))
+
+
+def test_plan_sweep_batches_coded_sessions():
+    """api.plan_sweep: one batched solve across a Session sweep produces
+    states identical to per-session planning (same plan, same parity)."""
+    import jax
+
+    from repro.api import CodedFL, Session, TrainData, plan_sweep
+    from repro.sim.network import paper_fleet
+
+    fleet = paper_fleet(0.2, 0.2, seed=0, n=8, d=40)
+    data = TrainData.linreg(jax.random.PRNGKey(0), n=8, ell=20, d=40)
+    sessions = [
+        Session(strategy=CodedFL(key=jax.random.PRNGKey(5), fixed_c=c),
+                fleet=fleet, lr=0.01, epochs=3)
+        for c in (8, 24, 40)
+    ]
+    states = plan_sweep(sessions, data)
+    for sess, state in zip(sessions, states):
+        solo = sess.plan(data)
+        assert state.plan.t_star == solo.plan.t_star
+        np.testing.assert_array_equal(state.plan.loads, solo.plan.loads)
+        assert state.plan.c == solo.plan.c
+        np.testing.assert_allclose(np.asarray(state.x_parity),
+                                   np.asarray(solo.x_parity))
+        # and the planned state runs end-to-end
+        rep = sess.run(data, rng=np.random.default_rng(0), state=state)
+        assert np.all(np.isfinite(rep.nmse))
+
+
+def test_redundancy_plan_delta_guard():
+    """Satellite fix: loads_cap_total is required and delta raises a clear
+    error instead of ZeroDivisionError when it is not positive."""
+    with pytest.raises(TypeError):
+        RedundancyPlan(loads=np.array([1]), c=1, t_star=1.0,
+                       p_return=np.array([1.0, 1.0]), expected_agg=1.0)
+    plan = RedundancyPlan(loads=np.array([1]), c=1, t_star=1.0,
+                          p_return=np.array([1.0, 1.0]), expected_agg=1.0,
+                          loads_cap_total=0)
+    with pytest.raises(ValueError, match="loads_cap_total"):
+        plan.delta
+    ok = RedundancyPlan(loads=np.array([1]), c=2, t_star=1.0,
+                        p_return=np.array([1.0, 1.0]), expected_agg=1.0,
+                        loads_cap_total=8)
+    assert ok.delta == 0.25
