@@ -3,13 +3,15 @@
 All training benchmarks run through the unified Strategy/Session API
 (`repro.api`): each figure is a set of `Session` configurations over the
 same `TrainData`, executed by the single scan-jitted epoch engine.
+Strategies are constructed by name through `repro.api.make_strategy` —
+benchmarks never hand-build strategy dataclasses.
 """
 from __future__ import annotations
 
 import time
 
 import jax
-from repro.api import CodedFL, Session, TrainData, UncodedFL
+from repro.api import Session, TrainData, make_strategy
 
 N_DEVICES = 24
 ELL = 300
@@ -25,19 +27,41 @@ def problem(seed: int = 0) -> TrainData:
 
 
 def uncoded_session(fleet, epochs: int) -> Session:
-    return Session(strategy=UncodedFL(), fleet=fleet, lr=LR, epochs=epochs)
+    return Session(strategy=make_strategy("uncoded"), fleet=fleet, lr=LR,
+                   epochs=epochs)
 
 
 def cfl_session(fleet, epochs: int, delta: float,
                 include_upload_delay: bool = False,
                 server_always_returns: bool = False,
                 key_seed: int = 7, redundancy_plan=None) -> Session:
-    strategy = CodedFL(key=jax.random.PRNGKey(key_seed),
-                       fixed_c=int(delta * M),
-                       include_upload_delay=include_upload_delay,
-                       server_always_returns=server_always_returns,
-                       label=f"cfl_delta={delta}",
-                       redundancy_plan=redundancy_plan)
+    strategy = make_strategy(
+        "cfl", key_seed=key_seed, fixed_c=int(delta * M),
+        include_upload_delay=include_upload_delay,
+        server_always_returns=server_always_returns,
+        label=f"cfl_delta={delta}", redundancy_plan=redundancy_plan)
+    return Session(strategy=strategy, fleet=fleet, lr=LR, epochs=epochs)
+
+
+def scfl_session(fleet, epochs: int, delta: float,
+                 noise_multiplier: float = 0.5, sample_frac: float = 1.0,
+                 include_upload_delay: bool = False,
+                 key_seed: int = 7, label: str | None = None) -> Session:
+    strategy = make_strategy(
+        "stochastic", key_seed=key_seed, fixed_c=int(delta * M),
+        noise_multiplier=noise_multiplier, sample_frac=sample_frac,
+        include_upload_delay=include_upload_delay,
+        label=label or f"scfl_delta={delta}_sigma={noise_multiplier}")
+    return Session(strategy=strategy, fleet=fleet, lr=LR, epochs=epochs)
+
+
+def lowlat_session(fleet, epochs: int, delta: float, chunks: int = 8,
+                   include_upload_delay: bool = False,
+                   key_seed: int = 7, label: str | None = None) -> Session:
+    strategy = make_strategy(
+        "lowlatency", key_seed=key_seed, fixed_c=int(delta * M),
+        chunks=chunks, include_upload_delay=include_upload_delay,
+        label=label or f"lowlat_delta={delta}_q={chunks}")
     return Session(strategy=strategy, fleet=fleet, lr=LR, epochs=epochs)
 
 

@@ -1,0 +1,193 @@
+"""Four-way coding-scheme comparison: uncoded / CFL / stochastic CFL /
+low-latency wireless CFL on a heterogeneous wireless fleet.
+
+The first benchmark exercising the `repro.schemes` subsystem end-to-end:
+every configuration is a `Session` built by `make_strategy`, and EVERY
+allocation solve in a sweep — base CFL, weighted-server stochastic,
+partial-return low-latency — batches through one `plan_sweep` call into
+`repro.plan.solve_redundancy_batched`.
+
+Sections (full mode):
+  * four-way head-to-head at one redundancy point;
+  * redundancy sweep for the three coded schemes with a
+    monotone-in-redundancy convergence gate (more parity budget must not
+    slow wall-clock convergence);
+  * the stochastic scheme's noise/accuracy knob (final NMSE vs sigma);
+  * the low-latency scheme across link-heterogeneity levels.
+
+    PYTHONPATH=src python -m benchmarks.fig_schemes [--epochs 600]
+    PYTHONPATH=src python -m benchmarks.fig_schemes --smoke   # CI gate
+
+`--smoke` runs a single small configuration per scheme and asserts (a) the
+warm batched planning latency stays under budget and (b) both new schemes
+produce finite, descending NMSE traces — so a broken objective evaluator
+or scheme regression fails CI in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.api import (Session, TrainData, convergence_time, make_strategy,
+                       plan_sweep)
+from repro.sim.network import wireless_fleet
+
+from .common import (Timer, cfl_session, emit, lowlat_session, problem,
+                     scfl_session, uncoded_session)
+
+# --smoke budgets (seconds, warm): generous multiples of the measured warm
+# latencies so CI noise does not flake, while a regression to per-request
+# host solving still fails loudly.
+SMOKE_PLAN_BUDGET_S = 5.0
+
+
+def _run_all(sessions, data, seed=0):
+    states = plan_sweep(sessions, data)
+    return [sess.run(data, rng=np.random.default_rng(seed), state=state)
+            for sess, state in zip(sessions, states)]
+
+
+# ---------------------------------------------------------------------------
+# smoke mode (CI)
+# ---------------------------------------------------------------------------
+
+def smoke() -> None:
+    fleet = wireless_fleet(0.2, 0.2, nu_erasure=0.3, seed=0, n=12, d=40)
+    data = TrainData.linreg(jax.random.PRNGKey(0), n=12, ell=60, d=40)
+    c = int(0.3 * data.m)
+
+    def sessions():
+        return [
+            Session(strategy=make_strategy("uncoded"),
+                    fleet=fleet, lr=0.05, epochs=40),
+            Session(strategy=make_strategy("cfl", key_seed=7, fixed_c=c),
+                    fleet=fleet, lr=0.05, epochs=40),
+            Session(strategy=make_strategy("stochastic", key_seed=7,
+                                           fixed_c=c, noise_multiplier=0.5,
+                                           sample_frac=0.8),
+                    fleet=fleet, lr=0.05, epochs=40),
+            Session(strategy=make_strategy("lowlatency", key_seed=7,
+                                           fixed_c=c, chunks=8),
+                    fleet=fleet, lr=0.05, epochs=40),
+        ]
+
+    plan_sweep(sessions(), data)  # warm up the jitted solvers + encoders
+    t0 = time.perf_counter()
+    sess = sessions()
+    states = plan_sweep(sess, data)
+    t_plan = time.perf_counter() - t0
+    emit("fig_schemes/smoke_plan_sweep", t_plan * 1e6 / len(sess),
+         f"sessions={len(sess)};budget={SMOKE_PLAN_BUDGET_S}s")
+    assert t_plan < SMOKE_PLAN_BUDGET_S, \
+        f"batched scheme planning {t_plan:.2f}s over budget " \
+        f"{SMOKE_PLAN_BUDGET_S}s"
+
+    for s, state in zip(sess, states):
+        rep = s.run(data, rng=np.random.default_rng(0), state=state)
+        emit(f"fig_schemes/smoke_{rep.label}", 0.0,
+             f"final_nmse={rep.final_nmse():.3e};"
+             f"t_star={rep.epoch_durations[0]:.3f}s")
+        assert np.all(np.isfinite(rep.nmse)), f"{rep.label}: NaN in trace"
+        if rep.label in ("scfl", "lowlat"):
+            assert rep.final_nmse() < rep.nmse[0], \
+                f"{rep.label}: trace does not descend"
+    print("fig_schemes --smoke OK (plan budget held, NMSE finite)")
+
+
+# ---------------------------------------------------------------------------
+# full mode
+# ---------------------------------------------------------------------------
+
+def main(epochs: int = 600, delta: float = 0.28,
+         noise: float = 0.5, chunks: int = 8) -> None:
+    data = problem(0)
+    fleet = wireless_fleet(0.2, 0.2, nu_erasure=0.3, seed=0)
+    target = 1e-3
+
+    # --- four-way head-to-head --------------------------------------------
+    sessions = [
+        uncoded_session(fleet, epochs),
+        cfl_session(fleet, epochs, delta),
+        scfl_session(fleet, epochs, delta, noise_multiplier=noise,
+                     sample_frac=0.8),
+        lowlat_session(fleet, epochs, delta, chunks=chunks),
+    ]
+    with Timer() as t:
+        reps = _run_all(sessions, data)
+    for rep in reps:
+        emit(f"fig_schemes/{rep.label}", t.us / len(reps) / epochs,
+             f"final_nmse={rep.final_nmse():.3e};"
+             f"t_star={rep.epoch_durations[0]:.2f}s;"
+             f"t_conv_{target}={convergence_time(rep, target):.0f}s;"
+             f"extras={rep.extras}")
+
+    # --- redundancy sweep: convergence must be monotone in delta ----------
+    deltas = (0.07, 0.13, 0.28)
+    makers = {"cfl": cfl_session,
+              "scfl": lambda f, e, d: scfl_session(
+                  f, e, d, noise_multiplier=noise, sample_frac=0.8),
+              "lowlat": lambda f, e, d: lowlat_session(
+                  f, e, d, chunks=chunks)}
+    # the stochastic scheme converges to a privacy-noise NMSE floor, so its
+    # monotonicity gate uses a target above that floor
+    targets = {"cfl": target, "scfl": 2e-2, "lowlat": target}
+    sweep = [mk(fleet, epochs, d) for mk in makers.values()
+             for d in deltas]
+    with Timer() as t:
+        reps = _run_all(sweep, data)  # 9 allocation solves, batched
+    emit("fig_schemes/sweep_plan+run", t.us / len(sweep),
+         f"sessions={len(sweep)};deltas={deltas}")
+    for name, chunk in zip(makers, np.split(np.arange(len(sweep)), 3)):
+        times = [convergence_time(reps[i], targets[name]) for i in chunk]
+        finite = np.all(np.isfinite(times))
+        mono = all(t2 <= t1 * 1.02 for t1, t2 in zip(times, times[1:]))
+        emit(f"fig_schemes/monotone_{name}", 0.0,
+             f"target={targets[name]};t_conv={['%.0f' % x for x in times]};"
+             f"monotone={mono}")
+        assert finite, f"{name}: non-finite convergence time in sweep"
+        assert mono, \
+            f"{name}: convergence time not monotone in redundancy: {times}"
+
+    # --- stochastic noise/accuracy knob -----------------------------------
+    sigmas = (0.0, 0.5, 1.0)
+    sweep = [scfl_session(fleet, epochs, delta, noise_multiplier=s,
+                          label=f"scfl_sigma={s}") for s in sigmas]
+    reps = _run_all(sweep, data)
+    finals = [rep.final_nmse() for rep in reps]
+    emit("fig_schemes/noise_knob", 0.0,
+         ";".join(f"sigma={s}:final={f:.3e}" for s, f in zip(sigmas, finals)))
+    assert all(np.isfinite(finals))
+    assert finals[-1] > finals[0], \
+        "privacy noise should cost accuracy (NMSE floor)"
+
+    # --- low-latency scheme vs link heterogeneity -------------------------
+    fleets = {nu: wireless_fleet(0.2, 0.2, nu_erasure=nu, seed=0)
+              for nu in (0.0, 0.45)}
+    sweep = [lowlat_session(f, epochs, delta, chunks=chunks,
+                            label=f"lowlat_nu={nu}")
+             for nu, f in fleets.items()]
+    reps = _run_all(sweep, data)
+    for rep in reps:
+        emit(f"fig_schemes/{rep.label}", 0.0,
+             f"final_nmse={rep.final_nmse():.3e};"
+             f"t_star={rep.epoch_durations[0]:.2f}s;"
+             f"t_conv_{target}={convergence_time(rep, target):.0f}s")
+        assert np.all(np.isfinite(rep.nmse))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=600)
+    ap.add_argument("--delta", type=float, default=0.28)
+    ap.add_argument("--noise", type=float, default=0.5)
+    ap.add_argument("--chunks", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI mode: single point, assert budgets")
+    args = vars(ap.parse_args())
+    if args.pop("smoke"):
+        smoke()
+    else:
+        main(**args)

@@ -18,7 +18,7 @@ def main(argv=None) -> int:
                     help="reduced epoch counts (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig3,fig4,fig5,"
-                         "ablation,noniid,kernels,roofline")
+                         "schemes,ablation,noniid,kernels,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -40,6 +40,11 @@ def main(argv=None) -> int:
     if want("fig5"):
         from . import fig5_comm_load
         fig5_comm_load.main(epochs=600 if args.fast else 1600)
+    if want("schemes"):
+        from . import fig_schemes
+        # 600 epochs in both modes: the monotone-convergence gates need the
+        # slow-deadline (low-delta) runs to actually reach the target
+        fig_schemes.main(epochs=600)
     if want("noniid"):
         from . import noniid
         noniid.main(epochs=600 if args.fast else 1200)

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 tests + a 30-epoch quickstart smoke on the
-# Strategy/Session API + a planner-latency budget check.
+# Strategy/Session API + a planner-latency budget check + a single-point
+# sanity gate (plan latency, finite NMSE) for the repro.schemes strategies.
 #
 #   scripts/ci.sh [--perf]     # --perf additionally runs the full session
 #                              # micro-benchmark incl. legacy baselines
@@ -19,6 +20,10 @@ python examples/quickstart.py --epochs 30
 echo
 echo "== smoke: planner latency budget (benchmarks/perf_session --smoke) =="
 python -m benchmarks.perf_session --smoke
+
+echo
+echo "== smoke: new-scheme sanity (benchmarks/fig_schemes --smoke) =="
+python -m benchmarks.fig_schemes --smoke
 
 if [[ "${1:-}" == "--perf" ]]; then
     echo

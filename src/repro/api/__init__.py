@@ -1,10 +1,12 @@
 """Unified Strategy/Session training surface (see API.md).
 
 The `Strategy` protocol makes every coding scheme — uncoded FL, the paper's
-CFL, gradient coding, and future schemes — a pluggable class; the `Session`
-runner executes any of them through one scan-jitted epoch engine and returns
-a unified `TraceReport`.
+CFL, gradient coding, and the `repro.schemes` follow-ups — a pluggable
+class; the `Session` runner executes any of them through one scan-jitted
+epoch engine and returns a unified `TraceReport`.  `make_strategy(name,
+**kwargs)` constructs any registered scheme by name.
 """
+from .registry import available_strategies, make_strategy, register_strategy
 from .report import TraceReport, coding_gain, convergence_time
 from .session import Session, plan_sweep
 from .strategy import (CodedFL, EpochSchedule, GradientCodingFL, Strategy,
@@ -15,4 +17,5 @@ __all__ = [
     "Session", "plan_sweep",
     "Strategy", "TrainData", "EpochSchedule",
     "UncodedFL", "CodedFL", "GradientCodingFL",
+    "make_strategy", "register_strategy", "available_strategies",
 ]

@@ -1,0 +1,80 @@
+"""Strategy registry: construct any coding scheme by name.
+
+`make_strategy("cfl", key_seed=7, fixed_c=2016)` replaces hand-constructed
+strategy dataclasses in benchmarks/examples, and is the one place that
+knows where every scheme lives — including the `repro.schemes` subsystem,
+which is imported lazily so `repro.api` stays import-light.
+
+Names: uncoded, cfl, gradcode, stochastic (alias scfl), lowlatency (alias
+lowlat).  Extra keyword arguments pass straight through to the strategy
+dataclass; for key-carrying schemes, `key_seed=<int>` is accepted as a
+convenience and turned into `key=jax.random.PRNGKey(key_seed)`.
+
+User schemes join via `register_strategy("myscheme", MyStrategy)` (or as a
+decorator, `@register_strategy("myscheme")`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple, Type
+
+_BUILTINS: Dict[str, Tuple[str, str]] = {
+    "uncoded": ("repro.api.strategy", "UncodedFL"),
+    "cfl": ("repro.api.strategy", "CodedFL"),
+    "gradcode": ("repro.api.strategy", "GradientCodingFL"),
+    "stochastic": ("repro.schemes", "StochasticCodedFL"),
+    "lowlatency": ("repro.schemes", "LowLatencyCFL"),
+}
+_ALIASES: Dict[str, str] = {"scfl": "stochastic", "lowlat": "lowlatency"}
+_CUSTOM: Dict[str, Type] = {}
+
+
+def available_strategies() -> Tuple[str, ...]:
+    """Canonical registered names (aliases not included)."""
+    return tuple(sorted(set(_BUILTINS) | set(_CUSTOM)))
+
+
+def register_strategy(name: str, cls: Optional[Type] = None):
+    """Register a user strategy class under `name` (callable or decorator).
+    Built-in names and their aliases cannot be shadowed."""
+    if name in _BUILTINS or name in _ALIASES:
+        raise ValueError(
+            f"cannot register {name!r}: it is a built-in strategy name or "
+            "alias")
+
+    def _register(c: Type) -> Type:
+        _CUSTOM[name] = c
+        return c
+    return _register(cls) if cls is not None else _register
+
+
+def make_strategy(name: str, **kwargs):
+    """Construct a registered strategy by name (see module docstring)."""
+    if name in _CUSTOM:  # custom names are exact (never alias-expanded)
+        cls = _CUSTOM[name]
+    elif (canonical := _ALIASES.get(name, name)) in _BUILTINS:
+        module, attr = _BUILTINS[canonical]
+        cls = getattr(importlib.import_module(module), attr)
+    else:
+        raise ValueError(
+            f"unknown strategy {name!r}; available: "
+            f"{', '.join(available_strategies())}")
+
+    key_seed = kwargs.pop("key_seed", None)
+    fields = {f.name for f in dataclasses.fields(cls)} \
+        if dataclasses.is_dataclass(cls) else set()
+    if key_seed is not None and ("key" not in fields or "key" in kwargs):
+        raise ValueError(
+            f"key_seed is only valid for key-carrying strategies without an "
+            f"explicit key= argument (strategy {name!r})")
+    if "key" in fields and "key" not in kwargs:
+        if key_seed is None:
+            # no silent default: two runs that both "forgot" the key must
+            # not share generator/noise draws
+            raise ValueError(
+                f"strategy {name!r} needs a PRNG key: pass key=... or "
+                "key_seed=<int>")
+        import jax
+        kwargs["key"] = jax.random.PRNGKey(key_seed)
+    return cls(**kwargs)

@@ -12,6 +12,7 @@ be used from any layer without creating import cycles.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Dict
 
 import numpy as np
 
@@ -26,6 +27,9 @@ class TraceReport:
     label:           human-readable run tag ("uncoded", "cfl", ...)
     setup_time:      one-time setup wall time (parity upload / data sharing)
     uplink_bits_total: total bits moved device -> server over the whole run
+    extras:          strategy-specific scalar knobs/diagnostics surfaced by
+                     the optional `Strategy.report_extras(state)` hook
+                     (e.g. StochasticCodedFL's noise_multiplier)
     """
 
     times: np.ndarray
@@ -34,6 +38,7 @@ class TraceReport:
     label: str
     setup_time: float = 0.0
     uplink_bits_total: float = 0.0
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def final_nmse(self) -> float:
         return float(self.nmse[-1])

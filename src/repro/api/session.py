@@ -128,6 +128,7 @@ class Session:
 
         times = sched.t0 + np.concatenate(
             [[0.0], np.cumsum(sched.durations)])
+        extras_fn = getattr(self.strategy, "report_extras", None)
         return TraceReport(
             times=times,
             nmse=nmse_trace,
@@ -135,7 +136,8 @@ class Session:
             label=label if label is not None else self.strategy.label,
             setup_time=sched.setup_time,
             uplink_bits_total=self.strategy.uplink_bits(
-                state, self.fleet, self.epochs))
+                state, self.fleet, self.epochs),
+            extras=dict(extras_fn(state)) if extras_fn is not None else {})
 
 
 def plan_sweep(sessions: Sequence[Session], data: TrainData) -> List[Any]:

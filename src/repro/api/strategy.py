@@ -35,8 +35,10 @@ Three first-class implementations ship here:
                          (Tandon et al., the paper's ref [5]), previously
                          only reachable through a bespoke script loop.
 
-New coding schemes (e.g. the stochastic/low-latency variants in PAPERS.md)
-drop in as one more class — no fourth epoch loop.
+New coding schemes drop in as one more class — no fourth epoch loop.  The
+first two follow-ups (the stochastic and low-latency wireless variants in
+PAPERS.md) live in `repro.schemes`; construct any scheme by name via
+`repro.api.make_strategy`.
 """
 from __future__ import annotations
 
@@ -151,6 +153,14 @@ class Strategy(Protocol):
         """Static facts `round_contributions` branches on (cache key part)."""
         ...
 
+    # Optional hooks (looked up with getattr, not part of the protocol):
+    #   * report_extras(state) -> dict — scalar knobs/diagnostics copied
+    #     onto TraceReport.extras (e.g. StochasticCodedFL's noise knob);
+    #   * plan_request(fleet, data) -> repro.plan.PlanRequest and
+    #     plan_with(fleet, data, plan) -> state — expose them to let
+    #     `api.plan_sweep` batch the strategy's allocation solve with every
+    #     other session's into one jitted grid solve.
+
 
 # ---------------------------------------------------------------------------
 # Uncoded synchronous FL
@@ -254,16 +264,9 @@ class CodedFL:
         n = fleet.edge.n
         t_star = plan.t_star
 
-        # One-time parity upload: each device ships c rows of (d+1) floats
-        # over its own link; devices upload in parallel so the fleet-level
-        # delay is the slowest device.  Drawn FIRST, matching the legacy
-        # run_cfl generator order.
-        upload_bits = state.parity_upload_bits()
-        packets = np.ceil(upload_bits / fleet.packet_bits)
-        retrans = rng.geometric(1.0 - fleet.edge.p, size=n)
-        upload_time = float(np.max(
-            packets * retrans * (fleet.packet_bits / fleet.link_rates))) \
-            if state.c > 0 else 0.0
+        # One-time parity upload, drawn FIRST — the shared helper preserves
+        # the legacy run_cfl generator order
+        upload_time = cfl.sample_parity_upload_time(state, fleet, rng)
 
         received = np.empty((epochs, n), dtype=np.float32)
         parity_ok = np.empty(epochs, dtype=np.float32)
@@ -284,14 +287,7 @@ class CodedFL:
 
     def device_state(self, state: cfl.CFLState,
                      data: TrainData) -> Dict[str, jax.Array]:
-        n, ell = data.n, data.ell
-        row_client = jnp.repeat(jnp.arange(n, dtype=jnp.int32), ell)
-        return {"x": data.xs.reshape(data.m, data.d),
-                "y": data.ys.reshape(data.m),
-                "w_sys": state.load_mask.reshape(data.m),
-                "row_client": row_client,
-                "x_parity": state.x_parity,
-                "y_parity": state.y_parity}
+        return cfl.coded_device_state(state, data)
 
     def round_contributions(self, state, dev, beta, arrivals):
         resid = dev["x"] @ beta - dev["y"]
@@ -308,9 +304,7 @@ class CodedFL:
 
     def uplink_bits(self, state: cfl.CFLState, fleet: "FleetSpec",
                     epochs: int) -> float:
-        n = fleet.edge.n
-        return float(np.sum(state.parity_upload_bits())) \
-            + epochs * n * 2 * fleet.packet_bits
+        return cfl.coded_uplink_bits(state, fleet, epochs)
 
     def engine_key(self, state: cfl.CFLState) -> Hashable:
         return (state.c > 0, self.use_kernel)
@@ -357,15 +351,18 @@ class GradientCodingFL:
         n = fleet.edge.n
         # each client processes its whole group's data: r * ell points
         loads = np.full(n, state.plan.r * state.ell)
-        durations = np.empty(epochs)
-        group_ok = np.ones((epochs, state.n_groups), dtype=np.float32)
+        t_all = np.empty((epochs, n))
+        # the per-epoch host loop preserves the legacy generator draw order;
+        # the group reduction below is vectorized across all epochs at once
         for e in range(epochs):
-            t_i = sample_total(fleet.edge, loads, rng)
-            per_group = np.full(state.n_groups, np.inf)
-            for i, g in enumerate(state.plan.groups):
-                per_group[g] = min(per_group[g], t_i[i])
-            # epoch ends when the last group's first returner lands
-            durations[e] = float(per_group.max())
+            t_all[e] = sample_total(fleet.edge, loads, rng)
+        groups = np.asarray(state.plan.groups)
+        per_group = np.full((epochs, state.n_groups), np.inf)
+        np.minimum.at(per_group,
+                      (np.arange(epochs)[:, None], groups[None, :]), t_all)
+        # each epoch ends when the last group's first returner lands
+        durations = per_group.max(axis=1)
+        group_ok = np.ones((epochs, state.n_groups), dtype=np.float32)
         return EpochSchedule(durations=durations,
                              arrivals={"group_ok": group_ok},
                              setup_time=state.shard_time,

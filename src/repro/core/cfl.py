@@ -18,6 +18,7 @@ deciding who made the deadline) lives in `repro.sim`.
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +27,60 @@ import numpy as np
 from . import aggregation, encoding
 from .delay_model import DeviceDelayParams
 from .redundancy import RedundancyPlan, solve_redundancy, systematic_weights
+
+if TYPE_CHECKING:  # annotation-only: core must not import sim at runtime
+    from repro.sim.network import FleetSpec
+
+
+def parity_upload_bits(n: int, c: int, d: int, bits_per_value: int = 32,
+                       header_overhead: float = 0.10) -> np.ndarray:
+    """Bits each of n clients uploads for its (c, d+1) parity shard — the
+    ONE copy of this accounting, shared by every coded scheme's state."""
+    per_client = c * (d + 1) * bits_per_value * (1.0 + header_overhead)
+    return np.full(n, per_client)
+
+
+def sample_parity_upload_time(state, fleet: "FleetSpec",
+                              rng: np.random.Generator) -> float:
+    """One-time parity-upload wall time for any coded-scheme state (needs
+    `.parity_upload_bits()` and `.c`): each device ships its shard over its
+    own link; devices upload in parallel so the fleet-level delay is the
+    slowest one.  The geometric retransmission draw happens even when
+    c == 0, preserving the legacy generator order of every entry point."""
+    upload_bits = state.parity_upload_bits()
+    packets = np.ceil(upload_bits / fleet.packet_bits)
+    retrans = rng.geometric(1.0 - fleet.edge.p, size=fleet.edge.n)
+    if state.c == 0:
+        return 0.0
+    return float(np.max(
+        packets * retrans * (fleet.packet_bits / fleet.link_rates)))
+
+
+def coded_uplink_bits(state, fleet: "FleetSpec", epochs: int,
+                      packets_per_epoch: int = 2) -> float:
+    """Total device->server bits for a coded scheme: the one-time parity
+    upload plus `packets_per_epoch` packets per device per epoch (CFL and
+    the stochastic scheme use 2; chunked partial uploads pass chunks+1)."""
+    n = fleet.edge.n
+    return float(np.sum(state.parity_upload_bits())) \
+        + epochs * n * packets_per_epoch * fleet.packet_bits
+
+
+def coded_device_state(state, data) -> dict:
+    """The scan-engine operands every coded scheme shares: flat (m, d)
+    data layout, systematic load mask, per-row client ids, parity shards.
+    `state` needs `.load_mask`/`.x_parity`/`.y_parity`; `data` is a
+    `repro.api.TrainData` (duck-typed — core does not import api).
+    Schemes with extra operands (e.g. LowLatencyCFL's row_chunk) add them
+    on top of this dict."""
+    n, ell = data.n, data.ell
+    row_client = jnp.repeat(jnp.arange(n, dtype=jnp.int32), ell)
+    return {"x": data.xs.reshape(data.m, data.d),
+            "y": data.ys.reshape(data.m),
+            "w_sys": state.load_mask.reshape(data.m),
+            "row_client": row_client,
+            "x_parity": state.x_parity,
+            "y_parity": state.y_parity}
 
 
 @dataclasses.dataclass
@@ -47,9 +102,9 @@ class CFLState:
     def parity_upload_bits(self, bits_per_value: int = 32,
                            header_overhead: float = 0.10) -> np.ndarray:
         """Bits each client uploads for its parity shard (one-time cost)."""
-        d = self.x_parity.shape[1]
-        per_client = self.c * (d + 1) * bits_per_value * (1.0 + header_overhead)
-        return np.full(self.edge.n, per_client)
+        return parity_upload_bits(self.edge.n, self.c,
+                                  int(self.x_parity.shape[1]),
+                                  bits_per_value, header_overhead)
 
 
 def setup(key: jax.Array, xs: jax.Array, ys: jax.Array,

@@ -2,10 +2,14 @@
 
 `solve_redundancy_batched` evaluates the full `(t_grid, n, L)` expected-
 return tensor in one jitted shot and plans a whole delta/fleet sweep per
-call; `PlanRequest` describes one fleet + parity budget.  The legacy
-scalar stack survives in `repro.plan.reference` for parity tests and
-benchmark baselines.  Single-fleet callers keep using the thin shims
-`core.redundancy.solve_redundancy` / `core.cfl.setup`, which route here.
+call; `PlanRequest` describes one fleet + parity budget.  The objective is
+pluggable (`srv_weight` / `edge_chunks` — the `repro.schemes` extension
+points; see API.md "Adding an objective evaluator").  The legacy scalar
+stack survives in `repro.plan.reference` for parity tests and benchmark
+baselines, with the scheme objectives' oracles in
+`repro.plan.reference_schemes`.  Single-fleet callers keep using the thin
+shims `core.redundancy.solve_redundancy` / `core.cfl.setup`, which route
+here.
 """
 from .solver import (GRID_POINTS, MAX_DOUBLINGS, MAX_ROUNDS, PlanRequest,
                      solve_redundancy_batched)

@@ -1,0 +1,219 @@
+"""Host-side scalar reference solves for the `repro.schemes` strategies.
+
+Mirrors `repro.plan.reference` for the two follow-up coding schemes: the
+stochastic-CFL weighted-server objective (arXiv:2201.10092) and the
+low-latency partial-return objective (arXiv:2011.06223).  Same style as the
+seed stack — NumPy float64, one analytic-CDF evaluation per integer load
+per chunk, bracket + 64-iteration bisection on the deadline — and the same
+two jobs only:
+
+  * parity oracles for the batched grid solver's new objective evaluators
+    (`tests/test_schemes.py`: loads identical, t* within 1e-3 relative);
+  * the calibrated-noise-scale oracle for `StochasticCodedFL`
+    (`stochastic_noise_scale`).
+
+Nothing in the production path imports this module.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.delay_model import (K_MAX, DeviceDelayParams, _nbinom_pmf)
+from repro.core.redundancy import RedundancyPlan
+from repro.plan.reference import optimal_loads_loop, total_cdf_loop
+
+
+# ---------------------------------------------------------------------------
+# partial-return (low-latency wireless) edge objective
+# ---------------------------------------------------------------------------
+
+def chunk_cdf_loop(params: DeviceDelayParams, ell, t,
+                   chunks: int) -> np.ndarray:
+    """Pr{chunk q of assignment ell is done by t} — (n, chunks).
+
+    Chunk q covers the first q*ell/chunks points: compute shift
+    (q/chunks)*ell*a, stochastic rate mu/ell, shared retransmission
+    mixture (the scalar mirror of `core.delay_model.partial_cdf`).
+    """
+    ell = np.broadcast_to(np.asarray(ell, dtype=np.float64),
+                          params.a.shape).copy()
+    t = float(t)
+    fracs = np.arange(1, chunks + 1, dtype=np.float64) / chunks
+    shift = fracs[None, :] * (ell * params.a)[:, None]          # (n, Q)
+    gamma = (params.mu / np.maximum(ell, 1.0))[:, None, None]   # (n, 1, 1)
+
+    comm = params.tau > 0
+    s0 = t - shift
+    base = np.where(
+        s0 > 0,
+        -np.expm1(-np.minimum(gamma[..., 0] * np.maximum(s0, 0.0), 700.0)),
+        0.0)
+    base = np.where((ell > 0)[:, None], base, (t >= 0.0))
+
+    ks = np.arange(2, 2 + K_MAX, dtype=np.float64)
+    pmf = _nbinom_pmf(params.p[:, None], ks[None, :])           # (n, K)
+    t_resid = t - ks[None, :] * params.tau[:, None]             # (n, K)
+    s = t_resid[:, None, :] - shift[:, :, None]                 # (n, Q, K)
+    cdf_k = np.where(
+        s > 0,
+        -np.expm1(-np.minimum(gamma * np.maximum(s, 0.0), 700.0)),
+        0.0)
+    zero_load = (ell <= 0)[:, None, None]
+    cdf_k = np.where(zero_load, (t_resid >= 0.0)[:, None, :], cdf_k)
+    mix = np.sum(pmf[:, None, :] * cdf_k, axis=-1)
+    return np.where(comm[:, None], mix, base)
+
+
+def expected_partial_return(params: DeviceDelayParams, ell, t,
+                            chunks: int) -> np.ndarray:
+    """E[points uploaded by t] under Q-chunk partial uploads:
+    (ell/Q) * sum_q Pr{chunk q done by t}  (scalar-load calls)."""
+    ell = np.broadcast_to(np.asarray(ell, dtype=np.float64), params.a.shape)
+    return (ell / chunks) * np.sum(chunk_cdf_loop(params, ell, t, chunks),
+                                   axis=1)
+
+
+def optimal_loads_partial_loop(params: DeviceDelayParams, caps: np.ndarray,
+                               t: float, chunks: int,
+                               chunk: int = 512
+                               ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-integer-load grid search for the partial-return objective."""
+    caps = np.asarray(caps, dtype=np.int64)
+    n = params.n
+    l_max = int(caps.max())
+    best_val = np.zeros(n, dtype=np.float64)
+    best_ell = np.zeros(n, dtype=np.int64)
+    for lo in range(1, l_max + 1, chunk):
+        hi = min(lo + chunk - 1, l_max)
+        loads = np.arange(lo, hi + 1, dtype=np.float64)
+        vals = np.stack([expected_partial_return(params, l, t, chunks)
+                         for l in loads], axis=0)               # (L, n)
+        mask = loads[:, None] <= caps[None, :]
+        vals = np.where(mask, vals, -np.inf)
+        idx = np.argmax(vals, axis=0)
+        chunk_best = vals[idx, np.arange(n)]
+        better = chunk_best > best_val
+        best_val = np.where(better, chunk_best, best_val)
+        best_ell = np.where(better, loads[idx].astype(np.int64), best_ell)
+    return best_ell, best_val
+
+
+# ---------------------------------------------------------------------------
+# shared bisection scaffold (edge objective + weighted server, Eq. 16 style)
+# ---------------------------------------------------------------------------
+
+def _solve_two_part(edge: DeviceDelayParams, server: DeviceDelayParams,
+                    data_sizes: np.ndarray, edge_loads_fn, srv_weight: float,
+                    c_up: int | None, fixed_c: int | None,
+                    eps_rel: float, t_hi: float | None) -> RedundancyPlan:
+    """Bracket + 64-iteration bisection with separate edge/server objectives.
+
+    edge_loads_fn(caps, t) -> (loads, vals); the server is always the
+    all-or-nothing evaluator scaled by `srv_weight` in the aggregate.
+    """
+    data_sizes = np.asarray(data_sizes, dtype=np.int64)
+    m = int(data_sizes.sum())
+    if c_up is None:
+        c_up = m
+    server_cap = int(fixed_c) if fixed_c is not None else int(c_up)
+    srv_caps = np.array([server_cap], dtype=np.int64)
+
+    def aggregate(t):
+        loads, vals = edge_loads_fn(data_sizes, t)
+        if server_cap > 0:
+            s_load, s_val = optimal_loads_loop(server, srv_caps, t)
+        else:
+            s_load, s_val = np.zeros(1, np.int64), np.zeros(1)
+        agg = float(np.sum(vals)) + srv_weight * float(s_val[0])
+        return agg, loads, int(s_load[0])
+
+    if t_hi is None:
+        edge_mean = float(np.max(edge.mean_total(data_sizes)))
+        srv_mean = float(server.mean_total(np.array([server_cap]))[0])
+        t_hi = max(edge_mean, srv_mean) + 1.0
+    t_lo = 0.0
+    agg, loads, s_load = aggregate(t_hi)
+    guard = 0
+    while agg < m:
+        t_hi *= 2.0
+        agg, loads, s_load = aggregate(t_hi)
+        guard += 1
+        if guard > 60:
+            raise RuntimeError(
+                "cannot reach aggregate expected return m: the fleet cannot "
+                f"return {m} points in finite time (best {agg:.1f})")
+
+    for _ in range(64):
+        t_mid = 0.5 * (t_lo + t_hi)
+        agg_mid, loads_mid, s_mid = aggregate(t_mid)
+        if agg_mid >= m:
+            t_hi, agg, loads, s_load = t_mid, agg_mid, loads_mid, s_mid
+        else:
+            t_lo = t_mid
+        if (t_hi - t_lo) <= eps_rel * max(t_hi, 1e-12):
+            break
+
+    c = int(fixed_c) if fixed_c is not None else int(s_load)
+    p_return = np.append(
+        total_cdf_loop(edge, loads.astype(np.float64), t_hi),
+        total_cdf_loop(server, np.array([float(s_load)]), t_hi))
+    return RedundancyPlan(loads=loads.astype(np.int64), c=c, t_star=float(t_hi),
+                          p_return=p_return, expected_agg=float(agg),
+                          loads_cap_total=m)
+
+
+def solve_stochastic_reference(edge: DeviceDelayParams,
+                               server: DeviceDelayParams,
+                               data_sizes: np.ndarray, srv_weight: float,
+                               c_up: int | None = None,
+                               fixed_c: int | None = None,
+                               eps_rel: float = 1e-3,
+                               t_hi: float | None = None) -> RedundancyPlan:
+    """Stochastic-CFL allocation oracle: base all-or-nothing edge objective,
+    server expected return discounted by `srv_weight` (the per-round
+    subsampling + privacy-noise effective-rows factor)."""
+    def edge_loads(caps, t):
+        return optimal_loads_loop(edge, caps, t)
+    return _solve_two_part(edge, server, data_sizes, edge_loads, srv_weight,
+                           c_up, fixed_c, eps_rel, t_hi)
+
+
+def solve_lowlatency_reference(edge: DeviceDelayParams,
+                               server: DeviceDelayParams,
+                               data_sizes: np.ndarray, chunks: int,
+                               c_up: int | None = None,
+                               fixed_c: int | None = None,
+                               eps_rel: float = 1e-3,
+                               t_hi: float | None = None) -> RedundancyPlan:
+    """Low-latency wireless allocation oracle: Q-chunk partial-return edge
+    objective, undiscounted all-or-nothing server."""
+    def edge_loads(caps, t):
+        return optimal_loads_partial_loop(edge, caps, t, chunks)
+    return _solve_two_part(edge, server, data_sizes, edge_loads, 1.0,
+                           c_up, fixed_c, eps_rel, t_hi)
+
+
+# ---------------------------------------------------------------------------
+# stochastic-CFL calibrated noise scale
+# ---------------------------------------------------------------------------
+
+def stochastic_noise_scale(xs: np.ndarray, ys: np.ndarray,
+                           weights: np.ndarray,
+                           noise_multiplier: float) -> tuple[float, float]:
+    """Per-entry noise stds calibrated to the coded dataset's RMS.
+
+    With iid N(0,1) generator rows, coded entry (r, k) of the composite
+    parity X~ = sum_i G_i W_i X_i has variance sum_{i,row} w^2 x^2 over
+    column k; the calibrated std is `noise_multiplier` times the RMS of
+    that per-entry std across columns (and the single label column), so a
+    multiplier of sigma yields a parity SNR of ~1/sigma independent of the
+    data scale.  Float64 mirror of `StochasticCodedFL`'s calibration.
+    """
+    xs = np.asarray(xs, dtype=np.float64)
+    ys = np.asarray(ys, dtype=np.float64)
+    w2 = np.asarray(weights, dtype=np.float64) ** 2
+    d = xs.shape[-1]
+    var_x = float(np.sum(w2[..., None] * xs ** 2) / d)
+    var_y = float(np.sum(w2 * ys ** 2))
+    return (noise_multiplier * np.sqrt(var_x),
+            noise_multiplier * np.sqrt(var_y))

@@ -19,6 +19,28 @@ one §IV plan.  This module replaces it with a closed-over-grid formulation:
     whole delta/fleet sweep in ONE jitted call (`(B, n)` delay parameters,
     per-request caps and parity budgets may differ).
 
+The objective is pluggable (the extension point the `repro.schemes`
+subsystem builds on).  Two knobs on `PlanRequest` select the evaluator:
+
+  * `srv_weight` scales the server's expected return in the aggregate —
+    the stochastic-CFL discount (arXiv:2201.10092): a privacy-noised,
+    per-round-subsampled parity row carries `srv_weight` effective rows.
+    Only the VALUE is discounted; the server's completion probability is
+    still evaluated at the full row load, so the chosen deadline stays
+    feasible for every per-round sampling realization (conservative by
+    design — see `repro.schemes.stochastic`).  Requests with different
+    weights batch together (it is a `(B,)` input); `srv_weight == 1.0` is
+    bit-identical to the base CFL objective.
+  * `edge_chunks` switches the edge evaluator to the partial-return
+    objective of low-latency wireless CFL (arXiv:2011.06223): a device
+    assigned `ell` points uploads `Q` incremental chunks, and its expected
+    return is `(ell/Q) * sum_q Pr{chunk q done by t}` — evaluated as `Q`
+    shifted copies of the same `(t_grid, n, L)` tensor, so over-assignment
+    still hurts through the `mu/ell` memory-access slowdown and the load
+    allocation stays a nontrivial argmax.  `edge_chunks` is a static shape
+    fact, so requests group by `(padded n, edge_chunks)`; `edge_chunks == 1`
+    takes the base code path unchanged.
+
 Numerics: the solver runs in float64 under a scoped `enable_x64` so its
 loads/probabilities match the float64 NumPy reference to well below the
 integer-argmax tie margin; parity is enforced by `tests/test_plan_solver.py`.
@@ -62,6 +84,10 @@ class PlanRequest:
     c_up:       max parity rows the server may receive (default: m)
     fixed_c:    force the coding redundancy (delta-sweep mode)
     t_hi:       optional initial deadline bracket override
+    srv_weight: effective rows per parity row in the aggregate return
+                (stochastic-CFL noise/subsampling discount; 1.0 = base CFL)
+    edge_chunks: per-epoch partial-upload chunks per device (low-latency
+                wireless objective; 1 = all-or-nothing base CFL)
     """
 
     edge: DeviceDelayParams
@@ -70,10 +96,18 @@ class PlanRequest:
     c_up: Optional[int] = None
     fixed_c: Optional[int] = None
     t_hi: Optional[float] = None
+    srv_weight: float = 1.0
+    edge_chunks: int = 1
 
     def __post_init__(self):
         object.__setattr__(
             self, "data_sizes", np.asarray(self.data_sizes, dtype=np.int64))
+        if not (0.0 <= float(self.srv_weight) <= 1.0):
+            raise ValueError(
+                f"srv_weight must be in [0, 1], got {self.srv_weight}")
+        if int(self.edge_chunks) < 1:
+            raise ValueError(
+                f"edge_chunks must be >= 1, got {self.edge_chunks}")
         if self.server.n != 1:
             raise ValueError("server params must describe exactly one device")
         if float(self.server.tau[0]) != 0.0:
@@ -103,15 +137,18 @@ class PlanRequest:
         return max(edge_mean, srv_mean) + 1.0
 
 
-@functools.partial(jax.jit, static_argnames=("search_f32",))
-def _solve_grid(a, mu, tau, p, srv_a, srv_mu, caps, srv_cap, target, t_hi0,
-                eps_rel, ell_e, ell_s, ks_search, ks_extract, mask_search,
-                mask_extract, frac, *, search_f32=True):
+@functools.partial(jax.jit, static_argnames=("search_f32", "edge_chunks"))
+def _solve_grid(a, mu, tau, p, srv_a, srv_mu, srv_w, caps, srv_cap, target,
+                t_hi0, eps_rel, ell_e, ell_s, ks_search, ks_extract,
+                mask_search, mask_extract, frac, *, search_f32=True,
+                edge_chunks=1):
     """Batched grid solve.  All inputs float64 except integer caps.
 
     a/mu/tau/p: (B, n) edge delay params    srv_a/srv_mu: (B,) server params
+    srv_w: (B,) server return weights (1.0 = base CFL objective)
     caps: (B, n) load caps                  srv_cap: (B,) parity budgets
     target: (B,) aggregate-return targets   t_hi0: (B,) initial brackets
+    edge_chunks: static partial-return chunk count (1 = all-or-nothing)
     ell_e: (L,) edge load grid 0..L-1       ell_s: (Ls,) server load grid
     ks_search:  (K,) retransmission counts for the deadline search (tail
                 below ~1e-12: invisible to any eps_rel)
@@ -154,6 +191,7 @@ def _solve_grid(a, mu, tau, p, srv_a, srv_mu, caps, srv_cap, target, t_hi0,
         """Expected-return evaluators closing over params cast to `dtype`."""
         a_, mu_, tau_, p_ = (x.astype(dtype) for x in (a, mu, tau, p))
         srv_a_, srv_mu_ = srv_a.astype(dtype), srv_mu.astype(dtype)
+        srv_w_ = srv_w.astype(dtype)
         ell_e_, ell_s_, ks_ = (x.astype(dtype) for x in (ell_e, ell_s, ks))
         pmf = (ks_ - 1.0) * p_[..., None] ** (ks_ - 2.0) \
             * (1.0 - p_[..., None]) ** 2                        # (B, n, K)
@@ -178,15 +216,38 @@ def _solve_grid(a, mu, tau, p, srv_a, srv_mu, caps, srv_cap, target, t_hi0,
         snap_tol = 1e-4 if dtype == jnp.float32 else 1e-13
         snap_ok = pmf_total >= 1.0 - snap_tol                   # (B, n)
 
+        def _load_cdf(t_res):
+            """Per-load completion CDF at residual time `t_res` (B, T', n).
+
+            edge_chunks == 1: Pr{the whole assignment ell is done} — the
+            base all-or-nothing evaluator, code path unchanged.
+            edge_chunks == Q > 1: the partial-return objective — the MEAN
+            over q of Pr{chunk q (first q*ell/Q points) is done}, i.e. the
+            expected FRACTION of the assignment uploaded by t.  Each chunk
+            shifts the deterministic compute by (q/Q)*ell*a while the
+            stochastic rate stays mu/ell (the memory-access slowdown scales
+            with the full assignment), so over-assignment still hurts.
+            Returns (B, T', n, L)."""
+            if edge_chunks == 1:
+                s = t_res[..., None] - shift[:, None, :, :]   # (B, T', n, L)
+                cdf = _shifted_exp_cdf(gamma[:, None], s)
+            else:
+                def add_q(j, acc):
+                    fq = (jnp.asarray(j, dtype) + 1.0) / edge_chunks
+                    s = t_res[..., None] - fq * shift[:, None, :, :]
+                    return acc + _shifted_exp_cdf(gamma[:, None], s)
+                cdf = jax.lax.fori_loop(
+                    0, edge_chunks, add_q,
+                    jnp.zeros(t_res.shape + (ell_e.shape[0],), dtype=dtype))
+                cdf = cdf / edge_chunks
+            return jnp.where(ell_e_ > 0.0, cdf,
+                             (t_res[..., None] >= 0.0).astype(dtype))
+
         def edge_returns(t):
             """Masked E[R_i(t; ell)] grid.  t: (B, T') -> (B, T', n, L)."""
             def add_k(i, acc):
                 t_res = t[:, :, None] - ks_[i] * tau_[:, None, :]
-                s = t_res[..., None] - shift[:, None, :, :]   # (B, T', n, L)
-                cdf = _shifted_exp_cdf(gamma[:, None], s)
-                cdf = jnp.where(ell_e_ > 0.0, cdf,
-                                (t_res[..., None] >= 0.0).astype(cdf.dtype))
-                return acc + pmf[:, None, :, i, None] * cdf
+                return acc + pmf[:, None, :, i, None] * _load_cdf(t_res)
             mix = jax.lax.fori_loop(
                 0, ks.shape[0], add_k,
                 jnp.zeros(t.shape + (a.shape[1], ell_e.shape[0]),
@@ -196,20 +257,22 @@ def _solve_grid(a, mu, tau, p, srv_a, srv_mu, caps, srv_cap, target, t_hi0,
                                 snap_ok[:, None, :, None]),
                 jnp.ones((), dtype=dtype), mix)
             # tau == 0 devices have no retransmission mixture: compute CDF
-            s0 = t[:, :, None, None] - shift[:, None, :, :]
-            nocomm = _shifted_exp_cdf(gamma[:, None], s0)
-            nocomm = jnp.where(ell_e_ > 0.0, nocomm,
-                               (t[:, :, None, None] >= 0.0).astype(dtype))
+            nocomm = _load_cdf(
+                jnp.broadcast_to(t[:, :, None], t.shape + (a.shape[1],)))
             mix = jnp.where(has_comm[:, None, :, None], mix, nocomm)
             return jnp.where(load_ok[:, None], ell_e_ * mix, -jnp.inf)
 
         def server_returns(t):
-            """Masked server E[R(t; ell)].  t: (B, T') -> (B, T', Ls)."""
+            """Masked weighted server E[R(t; ell)].  (B, T') -> (B, T', Ls).
+
+            The weight srv_w discounts every parity row's contribution to
+            the aggregate (1.0 = base CFL, exact multiply-by-one)."""
             s = t[:, :, None] - s_shift[:, None, :]
             cdf = _shifted_exp_cdf(s_gamma[:, None], s)
             cdf = jnp.where(ell_s_ > 0.0, cdf,
                             (t[:, :, None] >= 0.0).astype(cdf.dtype))
-            return jnp.where(s_ok[:, None], ell_s_ * cdf, -jnp.inf)
+            return jnp.where(s_ok[:, None],
+                             srv_w_[:, None, None] * ell_s_ * cdf, -jnp.inf)
 
         def best_agg(t):
             """Aggregate best return.  t: (B, T') -> (B, T')."""
@@ -333,20 +396,23 @@ def solve_redundancy_batched(requests: Sequence[PlanRequest],
                              ) -> list[RedundancyPlan]:
     """Plan a whole sweep of fleets/budgets in one vectorized solve.
 
-    Requests are grouped by padded device count; each group runs as a single
-    jitted `(B, n)` solve.  Mixed `fixed_c` / free-redundancy requests batch
-    fine — the parity budget is just a per-request cap.  Raises RuntimeError
+    Requests are grouped by (padded device count, edge_chunks); each group
+    runs as a single jitted `(B, n)` solve.  Mixed `fixed_c` /
+    free-redundancy / `srv_weight` requests batch fine — budget and weight
+    are per-request inputs; `edge_chunks` changes the compiled evaluator,
+    so partial-return requests form their own groups.  Raises RuntimeError
     (like the legacy solver) if any request's fleet cannot reach its target.
     """
     requests = list(requests)
     plans: list[Optional[RedundancyPlan]] = [None] * len(requests)
-    groups: dict[int, list[int]] = {}
+    groups: dict[tuple[int, int], list[int]] = {}
     for i, req in enumerate(requests):
-        groups.setdefault(_bucket(req.edge.n, _N_BUCKET), []).append(i)
+        key = (_bucket(req.edge.n, _N_BUCKET), int(req.edge_chunks))
+        groups.setdefault(key, []).append(i)
 
     frac = np.arange(1, grid_points + 1, dtype=np.float64) / grid_points
 
-    for n_pad, idxs in groups.items():
+    for (n_pad, edge_chunks), idxs in groups.items():
         grp = [requests[i] for i in idxs]
         b = len(grp)
 
@@ -363,6 +429,7 @@ def solve_redundancy_batched(requests: Sequence[PlanRequest],
                          for r in grp]).astype(np.int64)
         srv_a = np.array([r.server.a[0] for r in grp])
         srv_mu = np.array([r.server.mu[0] for r in grp])
+        srv_w = np.array([float(r.srv_weight) for r in grp])
         srv_cap = np.array([r.server_cap for r in grp], dtype=np.int64)
         target = np.array([float(r.m) for r in grp])
         t_hi0 = np.array([r.t_hi if r.t_hi is not None else r.default_t_hi()
@@ -387,14 +454,14 @@ def solve_redundancy_batched(requests: Sequence[PlanRequest],
 
         with jax.experimental.enable_x64():
             out = _solve_grid(
-                a, mu, tau, p, srv_a, srv_mu, caps, srv_cap, target, t_hi0,
-                np.float64(eps_rel),
+                a, mu, tau, p, srv_a, srv_mu, srv_w, caps, srv_cap, target,
+                t_hi0, np.float64(eps_rel),
                 np.arange(l_edge, dtype=np.float64),
                 np.arange(l_srv, dtype=np.float64),
                 np.arange(2, 2 + max(k_search), dtype=np.float64),
                 np.arange(2, 2 + max(k_extract), dtype=np.float64),
                 k_mask(k_search), k_mask(k_extract), frac,
-                search_f32=search_f32)
+                search_f32=search_f32, edge_chunks=edge_chunks)
             t_star, loads, s_load, agg, feasible = \
                 (np.asarray(o) for o in out)
 

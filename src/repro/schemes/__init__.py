@@ -1,0 +1,26 @@
+"""Follow-up coding schemes on the Strategy/Session substrate (see API.md
+"The schemes layer").
+
+Every scheme here is a `repro.api.Strategy` dataclass whose load-allocation
+solve is an objective evaluator in `repro.plan`'s batched grid solver — no
+new epoch loops, no new host solvers:
+
+  * `StochasticCodedFL` — stochastic CFL with calibrated privacy noise on
+    the shared coded dataset and per-round parity subsampling
+    (arXiv:2201.10092; `PlanRequest.srv_weight`).
+  * `LowLatencyCFL` — partial-return CFL for heterogeneous wireless
+    fleets, chunked uploads + joint load/deadline solve
+    (arXiv:2011.06223; `PlanRequest.edge_chunks`).
+
+Construct them directly or via `repro.api.make_strategy("stochastic", ...)`
+/ `make_strategy("lowlatency", ...)`.
+"""
+from .base import CodedSchemeState
+from .lowlatency import LowLatencyCFL, LowLatencyState
+from .stochastic import StochasticCodedFL, StochasticState
+
+__all__ = [
+    "CodedSchemeState",
+    "StochasticCodedFL", "StochasticState",
+    "LowLatencyCFL", "LowLatencyState",
+]

@@ -41,11 +41,16 @@ def make_fleet(n: int, d: int, nu_comp: float, nu_link: float,
                rng: np.random.Generator,
                base_mac_kmacs: float = 1536.0,
                base_link_kbps: float = 216.0,
-               erasure_p: float = 0.1,
+               erasure_p=0.1,
                server_speedup: float = 10.0,
                header_overhead: float = 0.10,
                bits_per_value: int = 32) -> FleetSpec:
-    """Generate a fleet per §IV. `rng` drives the random ladder assignment."""
+    """Generate a fleet per §IV. `rng` drives the random ladder assignment.
+
+    `erasure_p` may be a scalar (the paper's homogeneous wireless links) or
+    an (n,) array of per-device erasure probabilities (the heterogeneous
+    scenario of `wireless_fleet`).
+    """
     ladder = np.arange(n)
     mac_rates = (1.0 - nu_comp) ** ladder * base_mac_kmacs * KMAC  # MAC/s
     link_rates = (1.0 - nu_link) ** ladder * base_link_kbps * 1e3  # bit/s
@@ -56,7 +61,7 @@ def make_fleet(n: int, d: int, nu_comp: float, nu_link: float,
     mu = 2.0 / a                             # 50% memory overhead => rate 2/a
     packet_bits = d * bits_per_value * (1.0 + header_overhead)
     tau = packet_bits / link_rates           # sec per packet
-    p = np.full(n, erasure_p)
+    p = np.broadcast_to(np.asarray(erasure_p, dtype=np.float64), (n,)).copy()
 
     edge = DeviceDelayParams(a=a, mu=mu, tau=tau, p=p)
 
@@ -74,3 +79,26 @@ def paper_fleet(nu_comp: float = 0.2, nu_link: float = 0.2,
     """The exact §IV configuration (24 devices, d=500)."""
     return make_fleet(n=n, d=d, nu_comp=nu_comp, nu_link=nu_link,
                       rng=np.random.default_rng(seed))
+
+
+def wireless_fleet(nu_comp: float = 0.2, nu_link: float = 0.2,
+                   nu_erasure: float = 0.3, seed: int = 0,
+                   n: int = 24, d: int = 500,
+                   base_erasure_p: float = 0.3,
+                   min_erasure_p: float = 0.02, **kw) -> FleetSpec:
+    """Heterogeneous wireless fleet (the arXiv:2011.06223 scenario).
+
+    On top of the §IV compute/link ladders, per-device erasure
+    probabilities follow their own geometric ladder
+
+        p_i = max((1 - nu_erasure)^i * base_erasure_p, min_erasure_p)
+
+    randomly assigned to devices, so links differ in BOTH rate (tau_i) and
+    reliability (p_i).  `nu_erasure = 0` recovers a homogeneous
+    `base_erasure_p` fleet.
+    """
+    rng = np.random.default_rng(seed)
+    ladder = (1.0 - nu_erasure) ** np.arange(n) * base_erasure_p
+    p = rng.permutation(np.maximum(ladder, min_erasure_p))
+    return make_fleet(n=n, d=d, nu_comp=nu_comp, nu_link=nu_link,
+                      rng=rng, erasure_p=p, **kw)

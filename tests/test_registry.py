@@ -1,0 +1,84 @@
+"""Tests for the `repro.api.make_strategy` registry."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CodedFL, GradientCodingFL, UncodedFL,
+                       available_strategies, make_strategy,
+                       register_strategy)
+from repro.schemes import LowLatencyCFL, StochasticCodedFL
+
+
+def test_builtin_names_construct_the_right_classes():
+    assert isinstance(make_strategy("uncoded"), UncodedFL)
+    assert isinstance(make_strategy("cfl", key_seed=1, fixed_c=10), CodedFL)
+    assert isinstance(make_strategy("gradcode", r=2), GradientCodingFL)
+    assert isinstance(make_strategy("stochastic", key_seed=1),
+                      StochasticCodedFL)
+    assert isinstance(make_strategy("lowlatency", key_seed=1), LowLatencyCFL)
+
+
+def test_aliases_resolve():
+    assert isinstance(make_strategy("scfl", key_seed=1), StochasticCodedFL)
+    assert isinstance(make_strategy("lowlat", key_seed=1), LowLatencyCFL)
+
+
+def test_kwargs_pass_through():
+    s = make_strategy("stochastic", key_seed=3, fixed_c=42,
+                      noise_multiplier=0.25, sample_frac=0.5)
+    assert s.fixed_c == 42 and s.noise_multiplier == 0.25
+    assert s.sample_frac == 0.5
+    ll = make_strategy("lowlatency", key_seed=3, chunks=16)
+    assert ll.chunks == 16
+
+
+def test_key_seed_equals_explicit_key():
+    a = make_strategy("cfl", key_seed=9, fixed_c=5)
+    b = make_strategy("cfl", key=jax.random.PRNGKey(9), fixed_c=5)
+    np.testing.assert_array_equal(np.asarray(a.key), np.asarray(b.key))
+
+
+def test_missing_key_raises_instead_of_silent_default():
+    """Key-carrying strategies must not silently share a default key."""
+    with pytest.raises(ValueError, match="PRNG key"):
+        make_strategy("cfl", fixed_c=10)
+    with pytest.raises(ValueError, match="PRNG key"):
+        make_strategy("stochastic")
+
+
+def test_key_seed_rejected_for_keyless_and_double_key():
+    with pytest.raises(ValueError, match="key_seed"):
+        make_strategy("uncoded", key_seed=1)
+    with pytest.raises(ValueError, match="key_seed"):
+        make_strategy("cfl", key=jax.random.PRNGKey(0), key_seed=1,
+                      fixed_c=5)
+
+
+def test_unknown_name_lists_available():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        make_strategy("nope")
+    names = available_strategies()
+    for expected in ("uncoded", "cfl", "gradcode", "stochastic",
+                     "lowlatency"):
+        assert expected in names
+
+
+def test_register_custom_strategy():
+    class MyScheme:
+        label = "mine"
+
+        def __init__(self, knob=1):
+            self.knob = knob
+
+    register_strategy("myscheme", MyScheme)
+    s = make_strategy("myscheme", knob=7)
+    assert isinstance(s, MyScheme) and s.knob == 7
+    assert "myscheme" in available_strategies()
+
+
+def test_register_rejects_builtin_names_and_aliases():
+    """Built-ins and their aliases cannot be shadowed by user schemes."""
+    with pytest.raises(ValueError, match="built-in"):
+        register_strategy("cfl", object)
+    with pytest.raises(ValueError, match="built-in"):
+        register_strategy("scfl", object)  # alias of "stochastic"

@@ -1,0 +1,358 @@
+"""Tests for the `repro.schemes` subsystem: the stochastic (arXiv:2201.10092)
+and low-latency wireless (arXiv:2011.06223) strategies and their objective
+evaluators in the batched grid planner.
+
+Three layers of guarantees:
+
+  * solver parity — the grid solver's weighted-server and partial-return
+    objectives reproduce the NumPy scalar oracles in
+    `repro.plan.reference_schemes` (loads identical, t* within 1e-3 rel);
+  * degenerate equivalence — each scheme's neutral setting
+    (noise = 0 & rho = 1; chunks = 1) reproduces `CodedFL` trace-for-trace
+    from the same seed and key;
+  * end-to-end — both schemes run unmodified under `Session`, batch their
+    solves through `plan_sweep`, and surface their knobs on
+    `TraceReport.extras`.
+"""
+import jax
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or a deterministic fallback
+
+from repro.api import Session, TrainData, make_strategy, plan_sweep
+from repro.core.delay_model import (DeviceDelayParams, partial_cdf,
+                                    total_cdf)
+from repro.plan import PlanRequest, solve_redundancy_batched
+from repro.plan.reference_schemes import (chunk_cdf_loop,
+                                          solve_lowlatency_reference,
+                                          solve_stochastic_reference,
+                                          stochastic_noise_scale)
+from repro.schemes import LowLatencyCFL, StochasticCodedFL
+from repro.sim.network import wireless_fleet
+
+
+def _random_fleet(rng: np.random.Generator, n: int):
+    a = rng.uniform(1e-3, 5e-2, n)
+    mu = (2.0 / a) * rng.uniform(0.5, 2.0, n)
+    tau = rng.uniform(1e-3, 5e-2, n)
+    p = rng.uniform(0.0, 0.3, n)
+    edge = DeviceDelayParams(a, mu, tau, p)
+    sa = np.array([a.min() / 10.0])
+    server = DeviceDelayParams(sa, 2.0 / sa, np.zeros(1), np.zeros(1))
+    return edge, server
+
+
+@pytest.fixture(scope="module")
+def small():
+    fleet = wireless_fleet(0.2, 0.2, nu_erasure=0.3, seed=0, n=12, d=40)
+    data = TrainData.linreg(jax.random.PRNGKey(0), n=12, ell=60, d=40)
+    return fleet, data
+
+
+# ---------------------------------------------------------------------------
+# solver parity vs the NumPy oracles
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 8), ell=st.integers(8, 60),
+       w=st.floats(0.3, 1.0), mode=st.sampled_from(["free", "fixed"]),
+       seed=st.integers(0, 10**6))
+def test_stochastic_objective_matches_reference(n, ell, w, mode, seed):
+    """Weighted-server grid solve == scalar oracle (loads exact, t* 1e-3)."""
+    rng = np.random.default_rng(seed)
+    edge, server = _random_fleet(rng, n)
+    sizes = rng.integers(ell // 2 + 1, ell + 1, size=n)
+    m = int(sizes.sum())
+    kw = {"fixed_c": int(rng.integers(m // 10 + 1, m + 1))} \
+        if mode == "fixed" else \
+        {"c_up": int(rng.integers(m // 10 + 1, m + 1))}
+    ref = solve_stochastic_reference(edge, server, sizes, w,
+                                     eps_rel=1e-4, **kw)
+    new = solve_redundancy_batched(
+        [PlanRequest(edge, server, sizes, srv_weight=w, **kw)],
+        eps_rel=1e-4)[0]
+    np.testing.assert_allclose(new.t_star, ref.t_star, rtol=1e-3)
+    np.testing.assert_array_equal(new.loads, ref.loads)
+    assert new.c == ref.c
+    np.testing.assert_allclose(new.expected_agg, ref.expected_agg, rtol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 8), ell=st.integers(8, 60),
+       chunks=st.sampled_from([2, 4, 8]),
+       mode=st.sampled_from(["free", "fixed"]), seed=st.integers(0, 10**6))
+def test_lowlatency_objective_matches_reference(n, ell, chunks, mode, seed):
+    """Partial-return grid solve == scalar oracle (loads exact, t* 1e-3)."""
+    rng = np.random.default_rng(seed)
+    edge, server = _random_fleet(rng, n)
+    sizes = rng.integers(ell // 2 + 1, ell + 1, size=n)
+    m = int(sizes.sum())
+    kw = {"fixed_c": int(rng.integers(m // 10 + 1, m + 1))} \
+        if mode == "fixed" else \
+        {"c_up": int(rng.integers(m // 10 + 1, m + 1))}
+    ref = solve_lowlatency_reference(edge, server, sizes, chunks,
+                                     eps_rel=1e-4, **kw)
+    new = solve_redundancy_batched(
+        [PlanRequest(edge, server, sizes, edge_chunks=chunks, **kw)],
+        eps_rel=1e-4)[0]
+    np.testing.assert_allclose(new.t_star, ref.t_star, rtol=1e-3)
+    np.testing.assert_array_equal(new.loads, ref.loads)
+    assert new.c == ref.c
+
+
+def test_mixed_objective_batch_matches_solo():
+    """CFL / weighted / partial requests in ONE batched call solve exactly
+    as they do alone (weights are per-request inputs; chunked requests
+    group separately) — and srv_weight=1 stays bit-identical to base."""
+    rng = np.random.default_rng(4)
+    edge, server = _random_fleet(rng, 6)
+    sizes = np.full(6, 40)
+    reqs = [
+        PlanRequest(edge, server, sizes, c_up=100),
+        PlanRequest(edge, server, sizes, c_up=100, srv_weight=0.5),
+        PlanRequest(edge, server, sizes, c_up=100, edge_chunks=4),
+        PlanRequest(edge, server, sizes, fixed_c=60, srv_weight=0.8),
+    ]
+    batch = solve_redundancy_batched(reqs)
+    for req, got in zip(reqs, batch):
+        solo = solve_redundancy_batched([req])[0]
+        assert got.t_star == solo.t_star
+        np.testing.assert_array_equal(got.loads, solo.loads)
+        assert got.c == solo.c
+    # srv_weight=1.0 multiplies by exactly 1.0: bit-identical to the plain
+    # request even when batched next to discounted ones
+    plain = solve_redundancy_batched([PlanRequest(edge, server, sizes,
+                                                  c_up=100)])[0]
+    assert batch[0].t_star == plain.t_star
+
+
+def test_weaker_server_weight_raises_deadline():
+    """A discounted parity row buys less aggregate return, so the same
+    fleet needs a later deadline (and the edge carries more load)."""
+    rng = np.random.default_rng(5)
+    edge, server = _random_fleet(rng, 6)
+    sizes = np.full(6, 40)
+    full = solve_redundancy_batched(
+        [PlanRequest(edge, server, sizes, c_up=120, srv_weight=1.0)])[0]
+    half = solve_redundancy_batched(
+        [PlanRequest(edge, server, sizes, c_up=120, srv_weight=0.4)])[0]
+    assert half.t_star >= full.t_star
+
+
+def test_plan_request_validates_new_fields():
+    rng = np.random.default_rng(0)
+    edge, server = _random_fleet(rng, 3)
+    with pytest.raises(ValueError, match="srv_weight"):
+        PlanRequest(edge, server, np.full(3, 10), srv_weight=1.5)
+    with pytest.raises(ValueError, match="edge_chunks"):
+        PlanRequest(edge, server, np.full(3, 10), edge_chunks=0)
+
+
+# ---------------------------------------------------------------------------
+# partial-return delay model
+# ---------------------------------------------------------------------------
+
+def test_partial_cdf_chunks_one_is_total_cdf():
+    edge, _ = _random_fleet(np.random.default_rng(2), 5)
+    ell = np.array([10, 20, 0, 15, 30])
+    np.testing.assert_array_equal(partial_cdf(edge, ell, 1.5, 1)[:, 0],
+                                  total_cdf(edge, ell, 1.5))
+
+
+def test_partial_cdf_monotone_and_matches_loop():
+    edge, _ = _random_fleet(np.random.default_rng(3), 6)
+    ell = np.array([12, 25, 7, 30, 18, 9])
+    pc = partial_cdf(edge, ell, 1.1, 8)
+    assert pc.shape == (6, 8)
+    # later chunks cover more work: completion probability non-increasing
+    assert np.all(np.diff(pc, axis=1) <= 1e-15)
+    # more time helps every chunk
+    assert np.all(partial_cdf(edge, ell, 2.2, 8) >= pc - 1e-15)
+    np.testing.assert_allclose(pc, chunk_cdf_loop(edge, ell, 1.1, 8),
+                               rtol=1e-12, atol=1e-15)
+
+
+# ---------------------------------------------------------------------------
+# degenerate equivalence with CodedFL
+# ---------------------------------------------------------------------------
+
+def test_stochastic_degenerates_to_cfl(small):
+    """noise = 0, rho = 1: same plan, same parity bits, same trace."""
+    fleet, data = small
+    c = int(0.3 * data.m)
+    key = jax.random.PRNGKey(5)
+    cfl = Session(strategy=make_strategy("cfl", key=key, fixed_c=c),
+                  fleet=fleet, lr=0.05, epochs=80)
+    scfl = Session(strategy=StochasticCodedFL(key=key, fixed_c=c,
+                                              noise_multiplier=0.0,
+                                              sample_frac=1.0),
+                   fleet=fleet, lr=0.05, epochs=80)
+    st_c, st_s = cfl.plan(data), scfl.plan(data)
+    assert st_c.plan.t_star == st_s.plan.t_star
+    np.testing.assert_array_equal(st_c.plan.loads, st_s.plan.loads)
+    np.testing.assert_array_equal(np.asarray(st_c.x_parity),
+                                  np.asarray(st_s.x_parity))
+    r_c = cfl.run(data, rng=np.random.default_rng(3), state=st_c)
+    r_s = scfl.run(data, rng=np.random.default_rng(3), state=st_s)
+    np.testing.assert_allclose(r_s.nmse, r_c.nmse, rtol=1e-5, atol=1e-8)
+    assert r_s.setup_time == r_c.setup_time
+
+
+def test_lowlatency_chunks_one_degenerates_to_cfl(small):
+    """chunks = 1 (all-or-nothing): same plan, same parity, same trace."""
+    fleet, data = small
+    c = int(0.3 * data.m)
+    key = jax.random.PRNGKey(5)
+    cfl = Session(strategy=make_strategy("cfl", key=key, fixed_c=c),
+                  fleet=fleet, lr=0.05, epochs=80)
+    ll = Session(strategy=LowLatencyCFL(key=key, fixed_c=c, chunks=1),
+                 fleet=fleet, lr=0.05, epochs=80)
+    st_c, st_l = cfl.plan(data), ll.plan(data)
+    assert st_c.plan.t_star == st_l.plan.t_star
+    np.testing.assert_array_equal(np.asarray(st_c.x_parity),
+                                  np.asarray(st_l.x_parity))
+    r_c = cfl.run(data, rng=np.random.default_rng(3), state=st_c)
+    r_l = ll.run(data, rng=np.random.default_rng(3), state=st_l)
+    np.testing.assert_allclose(r_l.nmse, r_c.nmse, rtol=1e-5, atol=1e-8)
+    assert r_l.setup_time == r_c.setup_time
+
+
+# ---------------------------------------------------------------------------
+# scheme semantics
+# ---------------------------------------------------------------------------
+
+def test_noise_scale_matches_reference(small):
+    fleet, data = small
+    strat = StochasticCodedFL(key=jax.random.PRNGKey(1), fixed_c=100,
+                              noise_multiplier=0.7)
+    state = strat.plan(fleet, data)
+    from repro.core.redundancy import systematic_weights
+    w = np.stack(systematic_weights(
+        state.plan, np.full(data.n, data.ell, dtype=np.int64)))
+    ref_x, ref_y = stochastic_noise_scale(np.asarray(data.xs),
+                                          np.asarray(data.ys), w, 0.7)
+    np.testing.assert_allclose(state.noise_scale_x, ref_x, rtol=1e-3)
+    np.testing.assert_allclose(state.noise_scale_y, ref_y, rtol=1e-3)
+    assert state.noise_scale_x > 0 and state.noise_scale_y > 0
+
+
+def test_noise_knob_degrades_accuracy(small):
+    """The privacy/accuracy tradeoff is visible: heavy noise ends at a
+    worse NMSE than no noise, and the knob is surfaced on the report."""
+    fleet, data = small
+    c = int(0.3 * data.m)
+
+    def run(noise):
+        sess = Session(strategy=StochasticCodedFL(
+            key=jax.random.PRNGKey(5), fixed_c=c, noise_multiplier=noise),
+            fleet=fleet, lr=0.05, epochs=120)
+        return sess.run(data, rng=np.random.default_rng(0))
+
+    clean, noisy = run(0.0), run(2.0)
+    assert noisy.extras["noise_multiplier"] == 2.0
+    # sigma = 2 => srv_weight = 1/(1+4) = 0.2 < 1.0 = clean's
+    assert noisy.extras["srv_weight"] < clean.extras["srv_weight"]
+    assert np.all(np.isfinite(noisy.nmse))
+    assert noisy.final_nmse() > clean.final_nmse()
+
+
+def test_stochastic_subsampling_unbiased(small):
+    """E over the round mask of the subsampled parity gradient equals the
+    full parity gradient (the 1/rho inverse-probability weighting)."""
+    fleet, data = small
+    strat = StochasticCodedFL(key=jax.random.PRNGKey(2), fixed_c=150,
+                              noise_multiplier=0.0, sample_frac=0.5)
+    state = strat.plan(fleet, data)
+    dev = strat.device_state(state, data)
+    beta = jax.random.normal(jax.random.PRNGKey(3), (data.d,))
+    rng = np.random.default_rng(0)
+    c = state.c
+    acc = np.zeros(data.d)
+    trials = 300
+    full = np.asarray(strat.round_contributions(
+        state, dev, beta,
+        {"received": np.zeros(data.n, np.float32),
+         "parity_mask": np.ones(c, np.float32),
+         "parity_ok": np.float32(1.0)}))
+    # full mask at rho=0.5 is scaled by 1/rho: undo for the expectation
+    full = full * strat.sample_frac
+    for _ in range(trials):
+        mask = (rng.random(c) < 0.5).astype(np.float32)
+        acc += np.asarray(strat.round_contributions(
+            state, dev, beta,
+            {"received": np.zeros(data.n, np.float32),
+             "parity_mask": mask, "parity_ok": np.float32(1.0)}))
+    mean = acc / trials
+    # MC error ~ 1/sqrt(300): loose 15% tolerance on the gradient norm
+    assert np.linalg.norm(mean - full) < 0.15 * np.linalg.norm(full)
+
+
+def test_lowlatency_partial_rows_track_chunks(small):
+    """Row masking matches the chunk map: exactly the rows of completed
+    chunks contribute, punctured rows never do."""
+    fleet, data = small
+    strat = LowLatencyCFL(key=jax.random.PRNGKey(2), fixed_c=100, chunks=4)
+    state = strat.plan(fleet, data)
+    dev = strat.device_state(state, data)
+    beta = jax.random.normal(jax.random.PRNGKey(0), (data.d,))
+    done = np.zeros(data.n, np.float32)
+    done[0] = 2.0  # client 0 finished 2 of 4 chunks
+    g = np.asarray(strat.round_contributions(
+        state, dev, beta, {"chunks_done": done,
+                           "parity_ok": np.float32(0.0)}))
+    # manual: rows of client 0 with chunk id < 2
+    rc = state.row_chunk[0]
+    rows = np.flatnonzero(rc < 2)
+    x0 = np.asarray(data.xs[0])[rows]
+    y0 = np.asarray(data.ys[0])[rows]
+    resid = x0 @ np.asarray(beta) - y0
+    np.testing.assert_allclose(g, resid @ x0, rtol=1e-4, atol=1e-4)
+
+
+def test_wireless_fleet_heterogeneous_erasures():
+    fleet = wireless_fleet(0.2, 0.2, nu_erasure=0.4, seed=0, n=16, d=50)
+    assert len(np.unique(fleet.edge.p)) > 1
+    assert fleet.edge.p.min() >= 0.02 and fleet.edge.p.max() <= 0.3
+    homo = wireless_fleet(0.2, 0.2, nu_erasure=0.0, seed=0, n=16, d=50)
+    np.testing.assert_allclose(homo.edge.p, 0.3)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end under Session / plan_sweep
+# ---------------------------------------------------------------------------
+
+def test_schemes_run_under_session_and_plan_sweep(small):
+    """Both schemes run unmodified under `Session`, and `plan_sweep`
+    batches their allocation solves with CFL's into one call, producing
+    states identical to solo planning."""
+    fleet, data = small
+    c = int(0.25 * data.m)
+    sessions = [
+        Session(strategy=make_strategy("uncoded"),
+                fleet=fleet, lr=0.05, epochs=30),
+        Session(strategy=make_strategy("cfl", key_seed=5, fixed_c=c),
+                fleet=fleet, lr=0.05, epochs=30),
+        Session(strategy=make_strategy("stochastic", key_seed=5, fixed_c=c,
+                                       noise_multiplier=0.5,
+                                       sample_frac=0.7),
+                fleet=fleet, lr=0.05, epochs=30),
+        Session(strategy=make_strategy("lowlatency", key_seed=5, fixed_c=c,
+                                       chunks=4),
+                fleet=fleet, lr=0.05, epochs=30),
+    ]
+    states = plan_sweep(sessions, data)
+    for sess, state in zip(sessions[1:], states[1:]):
+        solo = sess.plan(data)
+        assert state.plan.t_star == solo.plan.t_star
+        np.testing.assert_array_equal(state.plan.loads, solo.plan.loads)
+    for sess, state in zip(sessions, states):
+        rep = sess.run(data, rng=np.random.default_rng(0), state=state)
+        assert np.all(np.isfinite(rep.nmse))
+        assert rep.final_nmse() < rep.nmse[0]
+    # knobs surfaced
+    rep = sessions[2].run(data, rng=np.random.default_rng(0),
+                          state=states[2])
+    assert rep.extras["noise_multiplier"] == 0.5
+    rep = sessions[3].run(data, rng=np.random.default_rng(0),
+                          state=states[3])
+    assert rep.extras["chunks"] == 4.0

@@ -1,0 +1,104 @@
+"""Property tests for `Strategy.uplink_bits` across all five strategies.
+
+The contract every scheme's communication accounting must satisfy:
+
+  * non-negative for any epoch count, zero epochs included;
+  * affine in `epochs`: uplink(e) = intercept + slope * e with a constant
+    per-epoch slope >= 0 (no hidden super-linear terms);
+  * the intercept is the ONE-TIME share/upload term and must match the
+    scheme's `setup_time` semantics — a scheme that reports setup wall
+    time (parity upload, raw-data sharing) must charge one-time bits, and
+    a scheme with no setup must charge none.
+"""
+import jax
+import numpy as np
+from _hyp import given, settings, st  # hypothesis, or a deterministic fallback
+
+from repro.api import TrainData, make_strategy
+from repro.sim.network import wireless_fleet
+
+N, ELL, D = 12, 40, 30
+
+
+_SETUP = {}
+
+
+def _setup():
+    # module-level memo instead of a fixture: the _hyp fallback's @given
+    # wrapper cannot receive pytest fixtures
+    if not _SETUP:
+        _SETUP["fleet"] = wireless_fleet(0.2, 0.2, nu_erasure=0.3, seed=0,
+                                         n=N, d=D)
+        _SETUP["data"] = TrainData.linreg(jax.random.PRNGKey(0),
+                                          n=N, ell=ELL, d=D)
+    return _SETUP["fleet"], _SETUP["data"]
+
+
+def _strategies():
+    c = int(0.25 * N * ELL)
+    return [
+        make_strategy("uncoded"),
+        make_strategy("cfl", key_seed=3, fixed_c=c),
+        make_strategy("gradcode", r=3),
+        make_strategy("stochastic", key_seed=3, fixed_c=c,
+                      noise_multiplier=0.5, sample_frac=0.8),
+        make_strategy("lowlatency", key_seed=3, fixed_c=c, chunks=4),
+    ]
+
+
+_STATES = {}
+
+
+def _planned(strategy, fleet, data):
+    key = strategy.label
+    if key not in _STATES:
+        _STATES[key] = strategy.plan(fleet, data)
+    return _STATES[key]
+
+
+@settings(max_examples=10, deadline=None)
+@given(e1=st.integers(0, 200), e2=st.integers(0, 200))
+def test_uplink_bits_nonnegative_and_affine(e1, e2):
+    fleet, data = _setup()
+    for strategy in _strategies():
+        state = _planned(strategy, fleet, data)
+        b0 = strategy.uplink_bits(state, fleet, 0)
+        b1 = strategy.uplink_bits(state, fleet, e1)
+        b2 = strategy.uplink_bits(state, fleet, e2)
+        assert b0 >= 0 and b1 >= 0 and b2 >= 0, strategy.label
+        # affine: b(e) = b0 + slope * e, same slope everywhere
+        if e1 > 0:
+            slope1 = (b1 - b0) / e1
+            assert slope1 >= 0, strategy.label
+            np.testing.assert_allclose(
+                b2, b0 + slope1 * e2, rtol=1e-12,
+                err_msg=f"{strategy.label}: uplink_bits not affine in epochs")
+
+
+def test_one_time_term_matches_setup_time_semantics():
+    """intercept > 0 <=> the schedule reports a one-time setup cost."""
+    fleet, data = _setup()
+    for strategy in _strategies():
+        state = _planned(strategy, fleet, data)
+        b0 = strategy.uplink_bits(state, fleet, 0)
+        sched = strategy.sample_epochs(state, fleet, 2,
+                                       np.random.default_rng(0))
+        if sched.setup_time > 0:
+            assert b0 > 0, \
+                f"{strategy.label}: setup time without one-time uplink bits"
+        else:
+            assert b0 == 0, \
+                f"{strategy.label}: one-time uplink bits without setup time"
+
+
+def test_coded_one_time_term_is_parity_upload():
+    """For the three coded schemes the intercept is exactly the summed
+    per-client parity upload."""
+    fleet, data = _setup()
+    coded = {s.label: s for s in _strategies()}
+    for label in ("cfl", "scfl", "lowlat"):
+        strategy = coded[label]
+        state = _planned(strategy, fleet, data)
+        b0 = strategy.uplink_bits(state, fleet, 0)
+        np.testing.assert_allclose(
+            b0, float(np.sum(state.parity_upload_bits())), rtol=1e-12)
