@@ -8,6 +8,9 @@ benchmarks never hand-build strategy dataclasses.
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 
 import jax
@@ -74,5 +77,40 @@ class Timer:
         self.us = (time.perf_counter() - self.t0) * 1e6
 
 
+# Every emit() is also recorded here so CI smoke runs can persist the
+# whole measurement set as a machine-readable artifact (dump_bench) —
+# the perf trajectory is tracked across PRs instead of living in logs.
+_RECORDS: list = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                     "derived": derived})
+
+
+def dump_bench(benchmark: str, gates: dict | None = None) -> str:
+    """Write all records emitted so far to `BENCH_<benchmark>.json`.
+
+    `gates` carries the hard-gated values (budgets, latencies, NMSE
+    floors) as structured numbers next to the free-form records; the CI
+    workflow uploads the files as artifacts.  Target directory defaults
+    to the CWD and is overridable via $BENCH_DIR.
+    """
+    bench_dir = os.environ.get("BENCH_DIR", ".")
+    os.makedirs(bench_dir, exist_ok=True)
+    path = os.path.join(bench_dir, f"BENCH_{benchmark}.json")
+    payload = {
+        "schema": 1,
+        "benchmark": benchmark,
+        "generated_unix": round(time.time(), 1),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "gates": gates or {},
+        "records": list(_RECORDS),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bench artifact written: {path}")
+    return path

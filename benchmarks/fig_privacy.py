@@ -1,0 +1,194 @@
+"""Privacy-utility frontier: (epsilon, delta)-DP budget vs final NMSE for
+stochastic coded FL.
+
+The `repro.privacy` subsystem end-to-end: a whole grid of epsilon targets
+is calibrated to noise multipliers in ONE batched
+`repro.privacy.calibrate_noise` solve, every resulting
+`StochasticCodedFL` session plans through ONE batched `plan_sweep` grid
+solve (the targets differ only in the epsilon-parameterized
+`srv_weight`), and each run reports its composed epsilon spend on
+`TraceReport.extras` — the frontier is read back from the reports, not
+recomputed.
+
+Gates:
+  * calibration round-trips against the float64 NumPy oracle
+    (`repro.privacy.reference.epsilon_spent_reference`) within 1e-3
+    relative, and the reported spend never exceeds the target;
+  * the frontier is monotone: a LARGER epsilon budget (less privacy,
+    less noise) must not converge to a WORSE NMSE floor.
+
+    PYTHONPATH=src python -m benchmarks.fig_privacy [--epochs 400]
+    PYTHONPATH=src python -m benchmarks.fig_privacy --smoke   # CI gate
+
+`--smoke` runs a three-point frontier on a small fleet, asserts the
+calibration budget/round-trip/monotonicity gates, and writes the
+`BENCH_privacy.json` artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.api import Session, TrainData, make_strategy, plan_sweep
+from repro.plan import effective_srv_weight
+from repro.privacy import calibrate_noise
+from repro.privacy.reference import epsilon_spent_reference
+from repro.sim.network import wireless_fleet
+
+from .common import LR, Timer, dump_bench, emit, problem
+
+DELTA = 1e-5
+SAMPLE_FRAC = 0.8
+ROUNDTRIP_RTOL = 1e-3  # calibration vs the float64 oracle
+# --smoke budget (seconds, warm): generous multiple of the measured warm
+# batched-calibration latency (~5ms on the dev box) so CI noise does not
+# flake, while a regression to per-target host solving still fails loudly.
+SMOKE_CALIBRATE_BUDGET_S = 2.0
+
+
+def _scfl_sessions(fleet, data, epochs: int, eps_grid, sigmas, lr: float,
+                   include_baseline: bool = True):
+    """One SCFL session per calibrated target (+ a noise-free baseline).
+
+    Accounting fields ride on each strategy (rounds = epochs), so every
+    report carries its own epsilon spend.
+    """
+    c = int(0.3 * data.m)
+    sessions = [
+        Session(strategy=make_strategy(
+            "stochastic", key_seed=7, fixed_c=c,
+            noise_multiplier=float(s), sample_frac=SAMPLE_FRAC,
+            include_upload_delay=False, delta=DELTA, rounds=epochs,
+            label=f"scfl_eps={e:g}"),
+            fleet=fleet, lr=lr, epochs=epochs)
+        for e, s in zip(eps_grid, sigmas)]
+    if include_baseline:
+        sessions.append(Session(strategy=make_strategy(
+            "stochastic", key_seed=7, fixed_c=c, noise_multiplier=0.0,
+            sample_frac=SAMPLE_FRAC, include_upload_delay=False,
+            delta=DELTA, rounds=epochs, label="scfl_eps=inf"),
+            fleet=fleet, lr=lr, epochs=epochs))
+    return sessions
+
+
+def _check_roundtrip(eps_grid, sigmas, epochs: int) -> float:
+    """Max relative round-trip error vs the float64 NumPy oracle."""
+    worst = 0.0
+    for e, s in zip(eps_grid, sigmas):
+        back = epsilon_spent_reference(float(s), SAMPLE_FRAC, epochs,
+                                       DELTA)
+        rel = abs(back - e) / e
+        assert back <= e * (1.0 + ROUNDTRIP_RTOL), \
+            f"calibrated noise OVERSPENDS the budget: {back} > {e}"
+        assert rel <= ROUNDTRIP_RTOL, \
+            f"calibration round-trip off by {rel:.2e} (target {e})"
+        worst = max(worst, rel)
+    return worst
+
+
+def _check_frontier(eps_grid, finals, slack: float) -> None:
+    """Larger epsilon budget (less noise) must not be worse, up to slack."""
+    for (e1, f1), (e2, f2) in zip(zip(eps_grid, finals),
+                                  list(zip(eps_grid, finals))[1:]):
+        assert f2 <= f1 * slack, \
+            f"frontier not monotone: eps {e1} -> {f1:.3e} but " \
+            f"eps {e2} -> {f2:.3e}"
+
+
+def _run_frontier(fleet, data, epochs: int, eps_grid, lr: float = LR):
+    sigmas = np.asarray(calibrate_noise(
+        np.asarray(eps_grid, dtype=np.float64), delta=DELTA,
+        rounds=epochs, sample_frac=SAMPLE_FRAC))
+    sessions = _scfl_sessions(fleet, data, epochs, eps_grid, sigmas, lr)
+    states = plan_sweep(sessions, data)   # ONE batched allocation solve
+    reps = [s.run(data, rng=np.random.default_rng(0), state=st)
+            for s, st in zip(sessions, states)]
+    for rep in reps:
+        eps_spent, delta = rep.privacy_budget()
+        emit(f"fig_privacy/{rep.label}", 0.0,
+             f"final_nmse={rep.final_nmse():.3e};"
+             f"noise={rep.extras['noise_multiplier']:.4g};"
+             f"srv_weight={rep.extras['srv_weight']:.4g};"
+             f"eps_spent={eps_spent:.4g};delta={delta:g}")
+        assert np.all(np.isfinite(rep.nmse)), f"{rep.label}: NaN in trace"
+        sched = rep.extras["epsilon_schedule"]
+        assert sched.shape == (epochs,) and float(sched[-1]) == eps_spent
+        # the zero-noise baseline's schedule is all inf (diff undefined)
+        if np.isfinite(eps_spent):
+            assert np.all(np.diff(sched) >= 0.0), \
+                f"{rep.label}: epsilon schedule not monotone"
+    return sigmas, reps
+
+
+def smoke() -> None:
+    fleet = wireless_fleet(0.2, 0.2, nu_erasure=0.3, seed=0, n=12, d=40)
+    data = TrainData.linreg(jax.random.PRNGKey(0), n=12, ell=60, d=40)
+    epochs = 40
+    eps_grid = (1.0, 4.0, 16.0)
+
+    # warm the jitted calibration solve, then hold it to a latency budget
+    calibrate_noise(np.asarray(eps_grid), delta=DELTA, rounds=epochs,
+                    sample_frac=SAMPLE_FRAC)
+    t0 = time.perf_counter()
+    sigmas = np.asarray(calibrate_noise(
+        np.asarray(eps_grid), delta=DELTA, rounds=epochs,
+        sample_frac=SAMPLE_FRAC))
+    t_cal = time.perf_counter() - t0
+    emit("fig_privacy/smoke_calibrate_batched", t_cal * 1e6 / len(eps_grid),
+         f"targets={len(eps_grid)};budget={SMOKE_CALIBRATE_BUDGET_S}s")
+    # the artifact is written even when a gate trips — a regression is
+    # exactly when the measured values must survive into BENCH_privacy.json
+    gates = {"calibrate_batched_s": round(t_cal, 4),
+             "calibrate_budget_s": SMOKE_CALIBRATE_BUDGET_S,
+             "roundtrip_rtol": ROUNDTRIP_RTOL}
+    try:
+        assert t_cal < SMOKE_CALIBRATE_BUDGET_S, \
+            f"batched calibration {t_cal:.2f}s over budget " \
+            f"{SMOKE_CALIBRATE_BUDGET_S}s"
+
+        worst_rt = _check_roundtrip(eps_grid, sigmas, epochs)
+        gates["roundtrip_max_rel"] = worst_rt
+        emit("fig_privacy/smoke_roundtrip", 0.0,
+             f"max_rel={worst_rt:.2e};rtol={ROUNDTRIP_RTOL}")
+
+        _, reps = _run_frontier(fleet, data, epochs, eps_grid, lr=0.05)
+        finals = [rep.final_nmse() for rep in reps]
+        gates["final_nmse"] = {rep.label: rep.final_nmse() for rep in reps}
+        _check_frontier(list(eps_grid) + [np.inf], finals, slack=1.10)
+    finally:
+        dump_bench("privacy", gates=gates)
+    print("fig_privacy --smoke OK (calibration budget, round-trip, "
+          "monotone frontier)")
+
+
+def main(epochs: int = 400) -> None:
+    data = problem(0)
+    fleet = wireless_fleet(0.2, 0.2, nu_erasure=0.3, seed=0)
+    eps_grid = (0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
+
+    with Timer() as t:
+        sigmas, reps = _run_frontier(fleet, data, epochs, eps_grid)
+    emit("fig_privacy/frontier_plan+run", t.us / len(reps),
+         f"sessions={len(reps)};eps_grid={eps_grid}")
+    emit("fig_privacy/srv_weights", 0.0,
+         ";".join(f"eps={e:g}:w={effective_srv_weight(s, SAMPLE_FRAC):.3g}"
+                  for e, s in zip(eps_grid, sigmas)))
+    _check_roundtrip(eps_grid, sigmas, epochs)
+    finals = [rep.final_nmse() for rep in reps]
+    _check_frontier(list(eps_grid) + [np.inf], finals, slack=1.02)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=400)
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI mode: three-point frontier, assert "
+                         "gates, write BENCH_privacy.json")
+    args = vars(ap.parse_args())
+    if args.pop("smoke"):
+        smoke()
+    else:
+        main(**args)

@@ -6,7 +6,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.coded_grad import ops as cg_ops
 from repro.kernels.encode import ops as en_ops

@@ -18,8 +18,6 @@ import dataclasses
 import json
 import sys
 
-import jax
-
 
 def apply_sets(cfg, sets):
     for kv in sets:

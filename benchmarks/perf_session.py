@@ -38,7 +38,7 @@ from repro.core.encoding import generator_matrix
 from repro.plan import PlanRequest, solve_redundancy_batched
 from repro.sim.network import paper_fleet
 
-from .common import D, ELL, LR, M, N_DEVICES, emit
+from .common import D, ELL, LR, M, N_DEVICES, dump_bench, emit
 
 # --smoke budgets (seconds, warm): generous multiples of the measured warm
 # latencies (~0.1s single / ~1.8s sweep on the dev box) so CI noise does not
@@ -120,6 +120,15 @@ def bench_planning(fleet, data: TrainData, session: Session, c: int,
              f"solve={t_solve*1e3:.0f}ms;budget={SMOKE_SINGLE_BUDGET_S}s")
         emit("perf_session/plan_sweep16_new", t_sweep * 1e6,
              f"budget={SMOKE_SWEEP_BUDGET_S}s")
+        # artifact FIRST: a budget regression is exactly when the measured
+        # values must survive into the uploaded BENCH_perf.json
+        dump_bench("perf", gates={
+            "plan_single_s": round(t_plan, 4),
+            "plan_single_budget_s": SMOKE_SINGLE_BUDGET_S,
+            "plan_solve_s": round(t_solve, 4),
+            "plan_sweep16_s": round(t_sweep, 4),
+            "plan_sweep16_budget_s": SMOKE_SWEEP_BUDGET_S,
+        })
         assert t_plan < SMOKE_SINGLE_BUDGET_S, \
             f"single plan {t_plan:.2f}s over budget {SMOKE_SINGLE_BUDGET_S}s"
         assert t_sweep < SMOKE_SWEEP_BUDGET_S, \

@@ -18,7 +18,7 @@ def main(argv=None) -> int:
                     help="reduced epoch counts (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig3,fig4,fig5,"
-                         "schemes,ablation,noniid,kernels,roofline")
+                         "schemes,privacy,ablation,noniid,kernels,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -45,6 +45,9 @@ def main(argv=None) -> int:
         # 600 epochs in both modes: the monotone-convergence gates need the
         # slow-deadline (low-delta) runs to actually reach the target
         fig_schemes.main(epochs=600)
+    if want("privacy"):
+        from . import fig_privacy
+        fig_privacy.main(epochs=200 if args.fast else 400)
     if want("noniid"):
         from . import noniid
         noniid.main(epochs=600 if args.fast else 1200)

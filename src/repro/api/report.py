@@ -43,6 +43,20 @@ class TraceReport:
     def final_nmse(self) -> float:
         return float(self.nmse[-1])
 
+    def privacy_budget(self):
+        """(epsilon_spent, delta) when the strategy reported DP accounting
+        (e.g. `StochasticCodedFL` with an accounting horizon), else None.
+
+        The extras schema for privacy-accounting strategies:
+        `epsilon_spent` (composed total), `delta`, `accounting_rounds`,
+        `epsilon_schedule` ((rounds,) cumulative per-round epsilon), and
+        `epsilon_target` when the noise was calibrated to a budget.
+        """
+        eps = self.extras.get("epsilon_spent")
+        if eps is None:
+            return None
+        return float(eps), float(self.extras["delta"])
+
     @property
     def epochs(self) -> int:
         return int(self.epoch_durations.shape[0])

@@ -9,7 +9,7 @@ launchers.  `reduced()` returns the family-preserving smoke-test variant
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

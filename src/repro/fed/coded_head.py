@@ -17,10 +17,9 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, cfl
+from repro.core import cfl
 from repro.sim.network import FleetSpec
 from repro.sim.simulator import SimResult, run_cfl, run_uncoded
 

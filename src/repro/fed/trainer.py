@@ -22,15 +22,14 @@ laid out along the `data` mesh axis.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Iterator, Optional
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.delay_model import DeviceDelayParams, sample_total, total_cdf
-from repro.core.redundancy import RedundancyPlan, solve_redundancy
+from repro.core.redundancy import RedundancyPlan
 from repro.optim.optimizers import Optimizer, apply_updates
 
 

@@ -1,6 +1,5 @@
 """Pure-jnp oracle for the fused least-squares gradient."""
 import jax
-import jax.numpy as jnp
 
 
 def lsq_gradient(a: jax.Array, y: jax.Array, beta: jax.Array) -> jax.Array:

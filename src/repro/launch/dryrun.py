@@ -29,8 +29,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs import (ASSIGNED, INPUT_SHAPES, get_config, input_specs,
-                           list_archs)
+from repro.configs import (ASSIGNED, INPUT_SHAPES, get_config,
+                           input_specs)
 from repro.configs.base import ArchConfig
 from repro.launch import hlo_stats
 from repro.launch.mesh import make_production_mesh

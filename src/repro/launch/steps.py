@@ -2,7 +2,6 @@
 drivers and the multi-pod dry-run."""
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

@@ -23,7 +23,6 @@ Family wiring:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Optional
 
 import jax

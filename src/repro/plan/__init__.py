@@ -9,12 +9,48 @@ stack survives in `repro.plan.reference` for parity tests and benchmark
 baselines, with the scheme objectives' oracles in
 `repro.plan.reference_schemes`.  Single-fleet callers keep using the thin
 shims `core.redundancy.solve_redundancy` / `core.cfl.setup`, which route
-here.
+here.  `srv_weight_for_epsilon` parameterizes the stochastic-CFL server
+weight by an (epsilon, delta)-DP budget (batched calibration through
+`repro.privacy`), so privacy-utility sweeps batch like any other sweep.
 """
+import numpy as np
+
 from .solver import (GRID_POINTS, MAX_DOUBLINGS, MAX_ROUNDS, PlanRequest,
                      solve_redundancy_batched)
 
 __all__ = [
     "PlanRequest", "solve_redundancy_batched",
     "GRID_POINTS", "MAX_ROUNDS", "MAX_DOUBLINGS",
+    "effective_srv_weight", "srv_weight_for_epsilon",
 ]
+
+
+def effective_srv_weight(noise_multiplier, sample_frac):
+    """The stochastic-CFL server discount: rho / (1 + sigma^2).
+
+    A parity row sampled with probability rho whose gradient carries noise
+    power sigma^2 relative to signal is worth rho / (1 + sigma^2) clean
+    rows of expected-return VALUE (`PlanRequest.srv_weight`).  Vectorized;
+    the one place this formula lives (`StochasticCodedFL.srv_weight` and
+    the epsilon-parameterized helper below both route here).
+    """
+    nm = np.asarray(noise_multiplier, dtype=np.float64)
+    return np.asarray(sample_frac, dtype=np.float64) / (1.0 + nm * nm)
+
+
+def srv_weight_for_epsilon(epsilon_target, delta=1e-5, rounds=1,
+                           sample_frac=1.0):
+    """epsilon-parameterized `PlanRequest.srv_weight`, vectorized.
+
+    Calibrates the smallest noise multiplier meeting each (epsilon, delta,
+    rounds) budget — array targets run as ONE batched
+    `repro.privacy.calibrate_noise` solve — and returns the matching
+    server weight(s), so a privacy-utility sweep builds its `PlanRequest`s
+    (or `StochasticCodedFL(noise_multiplier=...)` strategies) without a
+    per-point calibration loop and batches the allocation solves through
+    `plan_sweep` as usual.
+    """
+    from repro.privacy import calibrate_noise
+    sigma = calibrate_noise(epsilon_target, delta=delta, rounds=rounds,
+                            sample_frac=sample_frac)
+    return effective_srv_weight(sigma, sample_frac)

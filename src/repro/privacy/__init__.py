@@ -1,0 +1,26 @@
+"""Privacy accounting subsystem: (epsilon, delta)-DP semantics for the
+stochastic coded-FL noise knob.
+
+Forward direction (`repro.privacy.accountant`): a Rényi-DP accountant for
+the subsampled Gaussian mechanism prices `rounds` training releases at
+`(noise_multiplier, sample_frac)` as a composed (epsilon, delta) budget —
+`epsilon_spent` (vectorized over whole sweeps) and `epsilon_schedule`
+(the per-round cumulative trajectory `StochasticCodedFL` surfaces on
+`TraceReport.extras`).
+
+Inverse direction (`repro.privacy.calibrate`): `calibrate_noise` turns an
+epsilon target back into the smallest adequate noise multiplier via a
+vectorized, jitted grid-then-polish solve in the style of
+`repro.plan._solve_grid`, so an entire epsilon-sweep calibrates in one
+batched call.
+
+`repro.privacy.reference` holds the float64 NumPy oracle both directions
+are tested against (and nothing in the production path imports it).
+"""
+from .accountant import (DEFAULT_ORDERS, epsilon_schedule, epsilon_spent)
+from .calibrate import calibrate_noise
+
+__all__ = [
+    "DEFAULT_ORDERS", "calibrate_noise", "epsilon_schedule",
+    "epsilon_spent",
+]

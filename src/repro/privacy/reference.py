@@ -1,0 +1,87 @@
+"""Float64 NumPy oracle for the Rényi-DP accountant.
+
+Mirrors `repro.privacy.accountant` loop-by-loop in plain NumPy +
+`math.lgamma` — per-order binomial sums with an explicit log-sum-exp, the
+same hybrid order grid (exact subsampled RDP at the small integer orders,
+the unsubsampled Gaussian bound at the large ones), and the same improved
+RDP -> (epsilon, delta) conversion.  Two jobs only:
+
+  * parity oracle for the jitted accountant and the batched calibration
+    round-trip (tests/test_privacy.py: epsilon within 1e-6 relative,
+    calibration round-trip within 1e-3 relative);
+  * the closed-form anchor: at `sample_frac == 1` the subsampled RDP
+    curve must equal the Gaussian mechanism's `alpha / (2 sigma^2)`
+    exactly (<= 1e-6 relative), which pins the binomial expansion to the
+    textbook closed form.
+
+Nothing in the production path imports this module.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .accountant import DEFAULT_ORDERS, LARGE_ORDERS, SMALL_ORDERS
+
+
+def gaussian_rdp_closed_form(noise_multiplier: float,
+                             orders: np.ndarray) -> np.ndarray:
+    """Unsubsampled Gaussian mechanism RDP: alpha / (2 sigma^2)."""
+    orders = np.asarray(orders, dtype=np.float64)
+    return orders / (2.0 * float(noise_multiplier) ** 2)
+
+
+def rdp_sgm_reference(noise_multiplier: float,
+                      sample_frac: float) -> np.ndarray:
+    """Per-round RDP at every `DEFAULT_ORDERS` order (scalar inputs).
+
+    Small integer orders: the exact subsampled-Gaussian binomial sum,
+    accumulated in log space with an explicit running log-sum-exp.  Large
+    orders: the Gaussian upper bound (see `accountant` module docs).
+    """
+    sigma = float(noise_multiplier)
+    q = float(sample_frac)
+    if sigma <= 0.0:
+        return np.full(DEFAULT_ORDERS.shape, np.inf)
+
+    rdp = []
+    for alpha_f in SMALL_ORDERS:
+        alpha = int(alpha_f)
+        log_terms = []
+        for k in range(alpha + 1):
+            log_binom = (math.lgamma(alpha + 1.0) - math.lgamma(k + 1.0)
+                         - math.lgamma(alpha - k + 1.0))
+            if q < 1.0:
+                log_w = log_binom + k * math.log(q) \
+                    + (alpha - k) * math.log1p(-q)
+            elif k < alpha:
+                continue  # (1-q)^(alpha-k) == 0 kills every k < alpha
+            else:
+                log_w = 0.0
+            log_terms.append(log_w + k * (k - 1) / (2.0 * sigma * sigma))
+        peak = max(log_terms)
+        log_a = peak + math.log(
+            sum(math.exp(t - peak) for t in log_terms))
+        rdp.append(log_a / (alpha - 1.0))
+    return np.concatenate([
+        np.array(rdp, dtype=np.float64),
+        gaussian_rdp_closed_form(sigma, LARGE_ORDERS)])
+
+
+def epsilon_from_rdp_reference(rdp_per_round: np.ndarray, rounds: int,
+                               delta: float) -> float:
+    """Compose and convert: min over orders of the improved conversion."""
+    best = np.inf
+    for alpha, rdp in zip(DEFAULT_ORDERS, rdp_per_round):
+        eps = (rounds * rdp + math.log1p(-1.0 / alpha)
+               - (math.log(delta) + math.log(alpha)) / (alpha - 1.0))
+        best = min(best, eps)
+    return max(best, 0.0)
+
+
+def epsilon_spent_reference(noise_multiplier: float, sample_frac: float,
+                            rounds: int, delta: float) -> float:
+    """Scalar float64 mirror of `repro.privacy.epsilon_spent`."""
+    return epsilon_from_rdp_reference(
+        rdp_sgm_reference(noise_multiplier, sample_frac), rounds, delta)

@@ -35,6 +35,19 @@ sampled row count, which only lands MORE often than the plan assumed
 
 Parity oracle: `repro.plan.reference_schemes.solve_stochastic_reference` /
 `stochastic_noise_scale`.
+
+**Privacy accounting** (`repro.privacy`): the noise knob has quantitative
+(epsilon, delta)-DP semantics.  Construct by budget —
+`StochasticCodedFL(key=..., epsilon_target=2.0, delta=1e-5, rounds=600)`
+— and the smallest adequate `noise_multiplier` is calibrated through the
+batched Rényi-DP solve (`repro.privacy.calibrate_noise`); or set
+`noise_multiplier` directly and pass `rounds=` to have the spend priced.
+Either way `report_extras` surfaces the cumulative per-round trajectory
+(`epsilon_schedule`) and the composed total (`epsilon_spent`) on
+`TraceReport.extras`.  The accounting model treats each training round as
+one release of a Poisson-subsampled Gaussian mechanism at
+`(noise_multiplier, sample_frac)` — see the `repro.privacy.accountant`
+module docs for the exact order grid and conversion.
 """
 from __future__ import annotations
 
@@ -72,17 +85,31 @@ class StochasticCodedFL:
 
     key:              PRNG key for generator matrices AND the privacy noise
     noise_multiplier: privacy-noise std relative to the coded data's RMS
-                      (0 = no noise; the paper's privacy/accuracy knob)
+                      (0 = no noise; the paper's privacy/accuracy knob).
+                      Defaults to 0.5 when neither it nor `epsilon_target`
+                      is given; mutually exclusive with `epsilon_target`.
     sample_frac:      per-round Bernoulli parity-row sampling probability
                       (1 = every row every round; draws NO extra generator
                       randomness at 1, keeping the stream aligned with
                       CodedFL)
     fixed_c / c_up / include_upload_delay / generator: as in `CodedFL`
     redundancy_plan:  pre-solved plan (one element of a batched sweep)
+    epsilon_target:   (epsilon, delta)-DP budget to train within; the
+                      noise multiplier is then CALIBRATED via
+                      `repro.privacy.calibrate_noise` (requires `rounds`).
+                      Sweeps should batch the calibration themselves
+                      (`repro.plan.srv_weight_for_epsilon` or a vector
+                      `calibrate_noise` call) and pass `noise_multiplier=`
+                      per strategy — per-strategy calibration here solves
+                      one target at a time.
+    delta:            DP delta for accounting/calibration
+    rounds:           accounting horizon (training rounds composed); when
+                      set, `report_extras` prices the run and surfaces
+                      `epsilon_spent` + the per-round `epsilon_schedule`
     """
 
     key: jax.Array
-    noise_multiplier: float = 0.5
+    noise_multiplier: Optional[float] = None
     sample_frac: float = 1.0
     fixed_c: Optional[int] = None
     c_up: Optional[int] = None
@@ -90,19 +117,51 @@ class StochasticCodedFL:
     generator: str = "normal"
     label: str = "scfl"
     redundancy_plan: Optional[RedundancyPlan] = None
+    epsilon_target: Optional[float] = None
+    delta: float = 1e-5
+    rounds: Optional[int] = None
 
     def __post_init__(self):
-        if self.noise_multiplier < 0:
-            raise ValueError(
-                f"noise_multiplier must be >= 0, got {self.noise_multiplier}")
         if not (0.0 < self.sample_frac <= 1.0):
             raise ValueError(
                 f"sample_frac must be in (0, 1], got {self.sample_frac}")
+        if not (0.0 < self.delta < 1.0):
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+        if self.rounds is not None and int(self.rounds) < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.epsilon_target is not None:
+            if self.rounds is None:
+                raise ValueError(
+                    "epsilon_target needs rounds=<training rounds>: the "
+                    "budget composes over the whole run")
+            from repro.privacy import calibrate_noise
+            sigma = float(calibrate_noise(
+                self.epsilon_target, delta=self.delta, rounds=self.rounds,
+                sample_frac=self.sample_frac))
+            # Tolerate noise_multiplier == the calibrated value so
+            # `dataclasses.replace` on a budget-constructed strategy
+            # (which re-runs this hook with BOTH fields populated) works;
+            # any other combination is a genuine conflict.
+            if self.noise_multiplier is not None \
+                    and self.noise_multiplier != sigma:
+                raise ValueError(
+                    "pass either epsilon_target= (calibrated noise) or "
+                    "noise_multiplier= (manual noise), not both; to "
+                    "recalibrate after changing the budget fields, pass "
+                    "noise_multiplier=None explicitly")
+            object.__setattr__(self, "noise_multiplier", sigma)
+        elif self.noise_multiplier is None:
+            object.__setattr__(self, "noise_multiplier", 0.5)
+        if self.noise_multiplier < 0:
+            raise ValueError(
+                f"noise_multiplier must be >= 0, got {self.noise_multiplier}")
 
     @property
     def srv_weight(self) -> float:
         """Effective rows per parity row: rho / (1 + sigma^2)."""
-        return self.sample_frac / (1.0 + self.noise_multiplier ** 2)
+        from repro.plan import effective_srv_weight
+        return float(effective_srv_weight(self.noise_multiplier,
+                                          self.sample_frac))
 
     # -- planning (batched through repro.plan) ------------------------------
 
@@ -228,9 +287,22 @@ class StochasticCodedFL:
         return (state.c > 0, float(self.sample_frac))
 
     def report_extras(self, state: StochasticState) -> Dict[str, float]:
-        """The privacy/accuracy knob, surfaced on every TraceReport."""
-        return {"noise_multiplier": float(self.noise_multiplier),
-                "sample_frac": float(self.sample_frac),
-                "srv_weight": float(state.srv_weight),
-                "noise_scale_x": float(state.noise_scale_x),
-                "noise_scale_y": float(state.noise_scale_y)}
+        """The privacy/accuracy knob — and, when an accounting horizon is
+        set, the composed (epsilon, delta) spend — on every TraceReport."""
+        extras = {"noise_multiplier": float(self.noise_multiplier),
+                  "sample_frac": float(self.sample_frac),
+                  "srv_weight": float(state.srv_weight),
+                  "noise_scale_x": float(state.noise_scale_x),
+                  "noise_scale_y": float(state.noise_scale_y)}
+        if self.rounds is not None:
+            from repro.privacy import epsilon_schedule
+            sched = epsilon_schedule(self.noise_multiplier,
+                                     self.sample_frac, self.rounds,
+                                     self.delta)
+            extras["delta"] = float(self.delta)
+            extras["accounting_rounds"] = int(self.rounds)
+            extras["epsilon_schedule"] = sched   # cumulative, per round
+            extras["epsilon_spent"] = float(sched[-1])
+            if self.epsilon_target is not None:
+                extras["epsilon_target"] = float(self.epsilon_target)
+        return extras

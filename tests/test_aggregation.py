@@ -5,8 +5,6 @@ import numpy as np
 from _hyp import given, settings, st  # hypothesis, or a deterministic fallback
 
 from repro.core import aggregation as agg
-from repro.core import cfl
-from repro.core.delay_model import DeviceDelayParams
 
 
 def _data(key, n=6, ell=40, d=16):

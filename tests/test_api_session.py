@@ -16,7 +16,6 @@ from repro.api import (CodedFL, GradientCodingFL, Session, TraceReport,
                        TrainData, UncodedFL, coding_gain, convergence_time)
 from repro.core import aggregation, cfl
 from repro.core.delay_model import sample_total
-from repro.core.gradient_coding import make_plan
 from repro.sim.network import paper_fleet
 
 

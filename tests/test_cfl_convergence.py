@@ -7,7 +7,7 @@ import pytest
 from repro.core import cfl
 from repro.sim import simulator as S
 from repro.sim.network import paper_fleet
-from repro.sim.simulator import coding_gain, convergence_time
+from repro.sim.simulator import coding_gain
 
 
 @pytest.fixture(scope="module")

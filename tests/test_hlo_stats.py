@@ -1,10 +1,5 @@
 """Tests for the lightweight collective-bytes parser (launch.hlo_stats) and
 the end-to-end launch drivers' CLI paths."""
-import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
-
 from repro.launch.hlo_stats import collective_bytes, _shape_bytes
 
 

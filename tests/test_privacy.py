@@ -1,0 +1,259 @@
+"""Tests for the `repro.privacy` subsystem: the Rényi-DP accountant for
+the subsampled Gaussian mechanism and the batched noise calibration.
+
+Four layers of guarantees:
+
+  * oracle parity — the jitted accountant reproduces the float64 NumPy
+    oracle (`repro.privacy.reference`) to <= 1e-6 relative, and at
+    `sample_frac == 1` both match the Gaussian mechanism's closed-form
+    RDP `alpha / (2 sigma^2)` exactly;
+  * DP structure (property tests) — epsilon is monotone in rounds and in
+    1/noise, and subsampling only amplifies privacy
+    (epsilon(rho < 1) <= epsilon(rho = 1));
+  * calibration — `calibrate_noise` round-trips through the oracle's
+    `epsilon_spent` to <= 1e-3 relative, batched targets solve exactly
+    like solo ones, and infeasible targets raise;
+  * integration — `StochasticCodedFL(epsilon_target=...)` calibrates at
+    construction, trains end-to-end under `Session`, and surfaces the
+    cumulative epsilon trajectory on `TraceReport.extras`.
+"""
+import jax
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or a deterministic fallback
+
+from repro.api import Session, TrainData, make_strategy
+from repro.plan import effective_srv_weight, srv_weight_for_epsilon
+from repro.privacy import (DEFAULT_ORDERS, calibrate_noise,
+                           epsilon_schedule, epsilon_spent)
+from repro.privacy.reference import (epsilon_spent_reference,
+                                     gaussian_rdp_closed_form,
+                                     rdp_sgm_reference)
+from repro.schemes import StochasticCodedFL
+from repro.sim.network import wireless_fleet
+
+
+# ---------------------------------------------------------------------------
+# oracle parity
+# ---------------------------------------------------------------------------
+
+def test_reference_rdp_matches_gaussian_closed_form_at_q1():
+    """q = 1 collapses the binomial sum to alpha / (2 sigma^2) exactly."""
+    for sigma in (0.5, 1.0, 1.3, 4.0):
+        rdp = rdp_sgm_reference(sigma, 1.0)
+        closed = gaussian_rdp_closed_form(sigma, DEFAULT_ORDERS)
+        np.testing.assert_allclose(rdp, closed, rtol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(sigma=st.floats(0.3, 8.0), q=st.floats(0.02, 1.0),
+       rounds=st.integers(1, 2000), dexp=st.integers(3, 8))
+def test_accountant_matches_reference(sigma, q, rounds, dexp):
+    """Jitted accountant == float64 NumPy oracle, <= 1e-6 relative."""
+    delta = 10.0 ** -dexp
+    got = epsilon_spent(sigma, q, rounds, delta)
+    want = epsilon_spent_reference(sigma, q, rounds, delta)
+    assert abs(got - want) <= 1e-6 * max(want, 1e-12)
+
+
+def test_zero_noise_is_infinite_epsilon():
+    assert np.isinf(epsilon_spent(0.0, 1.0, 10, 1e-5))
+    assert np.all(np.isinf(epsilon_schedule(0.0, 0.5, 7, 1e-5)))
+
+
+def test_epsilon_spent_broadcasts():
+    sigmas = np.array([0.8, 1.6, 3.2])
+    out = epsilon_spent(sigmas, 0.9, 200, 1e-5)
+    assert out.shape == (3,)
+    for s, e in zip(sigmas, out):
+        assert e == pytest.approx(epsilon_spent(float(s), 0.9, 200, 1e-5))
+
+
+# ---------------------------------------------------------------------------
+# DP structure: monotonicity + subsampling amplification
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(sigma=st.floats(0.4, 6.0), q=st.floats(0.05, 1.0),
+       t1=st.integers(1, 500), extra=st.integers(1, 500))
+def test_epsilon_monotone_in_rounds(sigma, q, t1, extra):
+    e1 = epsilon_spent(sigma, q, t1, 1e-5)
+    e2 = epsilon_spent(sigma, q, t1 + extra, 1e-5)
+    assert e2 >= e1 - 1e-12
+    sched = epsilon_schedule(sigma, q, 20, 1e-5)
+    assert np.all(np.diff(sched) >= -1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sigma=st.floats(0.4, 6.0), q=st.floats(0.05, 1.0),
+       factor=st.floats(1.05, 4.0), rounds=st.integers(1, 500))
+def test_epsilon_monotone_in_inverse_noise(sigma, q, factor, rounds):
+    """More noise can only shrink the budget spent."""
+    e_lo = epsilon_spent(sigma * factor, q, rounds, 1e-5)
+    e_hi = epsilon_spent(sigma, q, rounds, 1e-5)
+    assert e_lo <= e_hi + 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(sigma=st.floats(0.4, 6.0), q=st.floats(0.02, 0.999),
+       rounds=st.integers(1, 500))
+def test_subsampling_amplification(sigma, q, rounds):
+    """epsilon(rho < 1) <= epsilon(rho = 1)."""
+    assert epsilon_spent(sigma, q, rounds, 1e-5) \
+        <= epsilon_spent(sigma, 1.0, rounds, 1e-5) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(target=st.floats(0.2, 30.0), q=st.floats(0.05, 1.0),
+       rounds=st.integers(1, 1000))
+def test_calibration_roundtrip_vs_oracle(target, q, rounds):
+    """calibrate_noise then the ORACLE's epsilon_spent hits the target
+    within 1e-3 relative, without ever overspending it."""
+    sigma = calibrate_noise(target, delta=1e-5, rounds=rounds,
+                            sample_frac=q)
+    back = epsilon_spent_reference(sigma, q, rounds, 1e-5)
+    assert back <= target * (1.0 + 1e-3)
+    assert abs(back - target) <= 1e-3 * target
+
+
+def test_calibration_batched_matches_solo():
+    targets = np.array([0.5, 1.0, 2.0, 8.0, 32.0])
+    batch = calibrate_noise(targets, delta=1e-5, rounds=300,
+                            sample_frac=0.8)
+    solo = [calibrate_noise(float(t), delta=1e-5, rounds=300,
+                            sample_frac=0.8) for t in targets]
+    np.testing.assert_array_equal(batch, np.array(solo))
+
+
+def test_calibration_infeasible_target_raises():
+    with pytest.raises(RuntimeError, match="achievable floor"):
+        calibrate_noise(1e-5, delta=1e-5, rounds=10)
+
+
+def test_calibration_input_validation():
+    with pytest.raises(ValueError):
+        calibrate_noise(-1.0, delta=1e-5, rounds=10)
+    with pytest.raises(ValueError):
+        calibrate_noise(1.0, delta=2.0, rounds=10)
+    with pytest.raises(ValueError):
+        calibrate_noise(1.0, delta=1e-5, rounds=0)
+    with pytest.raises(ValueError):
+        epsilon_spent(1.0, sample_frac=0.0, rounds=10)
+
+
+def test_srv_weight_for_epsilon_matches_calibration():
+    targets = np.array([1.0, 4.0, 16.0])
+    w = srv_weight_for_epsilon(targets, delta=1e-5, rounds=200,
+                               sample_frac=0.8)
+    sigma = calibrate_noise(targets, delta=1e-5, rounds=200,
+                            sample_frac=0.8)
+    np.testing.assert_allclose(w, 0.8 / (1.0 + sigma ** 2), rtol=1e-12)
+    # scalar form
+    assert srv_weight_for_epsilon(4.0, rounds=200, sample_frac=0.8) \
+        == pytest.approx(effective_srv_weight(
+            calibrate_noise(4.0, rounds=200, sample_frac=0.8), 0.8))
+
+
+# ---------------------------------------------------------------------------
+# strategy integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small():
+    fleet = wireless_fleet(0.2, 0.2, nu_erasure=0.3, seed=0, n=12, d=40)
+    data = TrainData.linreg(jax.random.PRNGKey(0), n=12, ell=60, d=40)
+    return fleet, data
+
+
+def test_epsilon_target_construction_calibrates():
+    strat = StochasticCodedFL(key=jax.random.PRNGKey(1), fixed_c=100,
+                              epsilon_target=4.0, delta=1e-5, rounds=50,
+                              sample_frac=0.8)
+    sigma = calibrate_noise(4.0, delta=1e-5, rounds=50, sample_frac=0.8)
+    assert strat.noise_multiplier == pytest.approx(sigma)
+    assert strat.srv_weight == pytest.approx(
+        effective_srv_weight(sigma, 0.8))
+
+
+def test_epsilon_target_strategy_survives_replace():
+    """dataclasses.replace re-runs __post_init__ with BOTH epsilon_target
+    and the already-calibrated noise set; that must not be a conflict."""
+    import dataclasses
+    s = StochasticCodedFL(key=jax.random.PRNGKey(1), fixed_c=100,
+                          epsilon_target=4.0, rounds=50, sample_frac=0.8)
+    s2 = dataclasses.replace(s, label="renamed")
+    assert s2.noise_multiplier == s.noise_multiplier
+    # changing a budget field with stale noise IS a conflict...
+    with pytest.raises(ValueError, match="noise_multiplier=None"):
+        dataclasses.replace(s, rounds=100)
+    # ...and recalibrates when the caller clears the noise explicitly
+    s3 = dataclasses.replace(s, rounds=100, noise_multiplier=None)
+    assert s3.noise_multiplier == pytest.approx(
+        calibrate_noise(4.0, delta=1e-5, rounds=100, sample_frac=0.8))
+
+
+def test_epsilon_target_validation():
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="not both"):
+        StochasticCodedFL(key=key, epsilon_target=1.0, rounds=10,
+                          noise_multiplier=0.5)
+    with pytest.raises(ValueError, match="rounds"):
+        StochasticCodedFL(key=key, epsilon_target=1.0)
+    # omitting both keeps the documented 0.5 default
+    assert StochasticCodedFL(key=key).noise_multiplier == 0.5
+
+
+def test_epsilon_target_trains_and_reports(small):
+    """Acceptance path: construct by budget, train end-to-end, read the
+    cumulative epsilon off TraceReport.extras."""
+    fleet, data = small
+    epochs = 30
+    strat = make_strategy("stochastic", key_seed=7,
+                          fixed_c=int(0.3 * data.m), epsilon_target=8.0,
+                          delta=1e-5, rounds=epochs, sample_frac=0.8,
+                          include_upload_delay=False)
+    rep = Session(strategy=strat, fleet=fleet, lr=0.05,
+                  epochs=epochs).run(data, rng=np.random.default_rng(0))
+
+    assert np.all(np.isfinite(rep.nmse))
+    assert rep.final_nmse() < rep.nmse[0]
+    eps, delta = rep.privacy_budget()
+    assert delta == 1e-5
+    assert eps <= 8.0 * (1.0 + 1e-3)
+    assert eps == pytest.approx(8.0, rel=1e-3)
+    assert rep.extras["epsilon_target"] == 8.0
+    sched = rep.extras["epsilon_schedule"]
+    assert sched.shape == (epochs,)
+    assert np.all(np.diff(sched) >= 0.0) and sched[-1] == eps
+    assert rep.extras["accounting_rounds"] == epochs
+
+
+def test_manual_noise_with_horizon_reports_spend(small):
+    """rounds= alone prices a manually chosen noise level."""
+    fleet, data = small
+    strat = StochasticCodedFL(key=jax.random.PRNGKey(3),
+                              fixed_c=int(0.3 * data.m),
+                              noise_multiplier=1.5, sample_frac=0.5,
+                              rounds=20, include_upload_delay=False)
+    rep = Session(strategy=strat, fleet=fleet, lr=0.05,
+                  epochs=20).run(data, rng=np.random.default_rng(0))
+    eps, _ = rep.privacy_budget()
+    assert eps == pytest.approx(
+        epsilon_spent_reference(1.5, 0.5, 20, 1e-5), rel=1e-6)
+    assert "epsilon_target" not in rep.extras
+
+
+def test_no_horizon_reports_no_budget(small):
+    fleet, data = small
+    strat = StochasticCodedFL(key=jax.random.PRNGKey(3),
+                              fixed_c=int(0.3 * data.m),
+                              noise_multiplier=0.5,
+                              include_upload_delay=False)
+    rep = Session(strategy=strat, fleet=fleet, lr=0.05,
+                  epochs=10).run(data, rng=np.random.default_rng(0))
+    assert rep.privacy_budget() is None
+    assert "epsilon_schedule" not in rep.extras

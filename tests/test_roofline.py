@@ -116,7 +116,7 @@ def test_dominant_term():
 
 
 def test_collectives_detected_under_mesh():
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     devs = jax.devices()
     if len(devs) < 1:
         pytest.skip("no devices")

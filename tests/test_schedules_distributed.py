@@ -1,6 +1,5 @@
 """Tests for LR schedules, gradient clipping, and the multi-host bootstrap's
 single-process paths."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, input_specs
+from repro.configs import get_config
 from repro.launch import sharding as SH
 from repro.launch.mesh import data_axes, make_host_mesh
 from repro.launch.steps import make_decode_step, make_train_step

@@ -1,7 +1,5 @@
 """Tests for the substrate: optimizers, checkpointing, data partitioning,
 federated trainer."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
