@@ -4,17 +4,18 @@ heterogeneity (0.4, 0.4) — more parity converges faster but ships more bits.
 Migrated to the Session API: the uplink accounting comes straight from each
 strategy's `uplink_bits` (via `TraceReport.uplink_bits_total`) prorated to
 the convergence epoch.  The delta sweep's redundancy planning happens in
-ONE batched solver call (`plan_sweep`).
+ONE batched solver call (`plan_sweep`) and the training in one
+`run_sweep` computation.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.api import coding_gain, convergence_time, plan_sweep
+from repro.api import coding_gain, convergence_time, plan_sweep, run_sweep
 from repro.sim.network import paper_fleet
 
-from .common import N_DEVICES, Timer, cfl_session, emit, problem, \
-    uncoded_session
+from .common import (
+    N_DEVICES, Timer, cfl_session, emit, problem, uncoded_session)
 
 TARGET = 1.8e-4  # the paper's Fig.-5 target NMSE
 
@@ -32,18 +33,22 @@ def main(epochs: int = 1600, deltas=(0.07, 0.13, 0.16, 0.28, 0.4),
     emit("fig5/plan_sweep", t.us / len(sessions),
          f"sessions={len(sessions)}")
 
-    with Timer() as t:
-        res_u = sessions[0].run(data, rng=np.random.default_rng(0),
-                                state=states[0])
+    with Timer() as t:  # one batched training computation for every curve
+        reports = run_sweep(sessions, data,
+                            rngs=[np.random.default_rng(0)
+                                  for _ in sessions],
+                            states=states)
+    emit("fig5/run_sweep", t.us / (len(sessions) * epochs),
+         f"sessions={len(sessions)}")
+
+    res_u = reports[0]
     t_u = convergence_time(res_u, TARGET)
     # communication up to the convergence point only
     epochs_to_conv = int(np.searchsorted(res_u.times, t_u))
     bits_u = epochs_to_conv * per_epoch_bits
-    emit("fig5/uncoded", t.us / epochs, f"t_conv={t_u:.0f}s;bits={bits_u:.3e}")
+    emit("fig5/uncoded", 0.0, f"t_conv={t_u:.0f}s;bits={bits_u:.3e}")
 
-    for delta, sess, state in zip(deltas, sessions[1:], states[1:]):
-        with Timer() as t:
-            res_c = sess.run(data, rng=np.random.default_rng(0), state=state)
+    for delta, res_c in zip(deltas, reports[1:]):
         g = coding_gain(res_u, res_c, TARGET)
         t_c = convergence_time(res_c, TARGET)
         ep_c = int(np.searchsorted(res_c.times, t_c))
@@ -51,7 +56,7 @@ def main(epochs: int = 1600, deltas=(0.07, 0.13, 0.16, 0.28, 0.4),
         # plus the per-epoch traffic up to the convergence point
         parity_bits = res_c.uplink_bits_total - res_c.epochs * per_epoch_bits
         bits_c = parity_bits + ep_c * per_epoch_bits
-        emit(f"fig5/cfl_delta={delta}", t.us / epochs,
+        emit(f"fig5/cfl_delta={delta}", 0.0,
              f"gain={g:.2f};t_conv={t_c:.0f}s;"
              f"comm_load_ratio={bits_c / bits_u:.2f}")
 

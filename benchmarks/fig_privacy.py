@@ -6,7 +6,9 @@ is calibrated to noise multipliers in ONE batched
 `repro.privacy.calibrate_noise` solve, every resulting
 `StochasticCodedFL` session plans through ONE batched `plan_sweep` grid
 solve (the targets differ only in the epsilon-parameterized
-`srv_weight`), and each run reports its composed epsilon spend on
+`srv_weight`), the whole frontier TRAINS as one batched `run_sweep`
+computation (noise is a value-only knob, so every lane shares one
+compiled engine), and each run reports its composed epsilon spend on
 `TraceReport.extras` — the frontier is read back from the reports, not
 recomputed.
 
@@ -32,7 +34,7 @@ import time
 import jax
 import numpy as np
 
-from repro.api import Session, TrainData, make_strategy, plan_sweep
+from repro.api import Session, TrainData, make_strategy, plan_sweep, run_sweep
 from repro.plan import effective_srv_weight
 from repro.privacy import calibrate_noise
 from repro.privacy.reference import epsilon_spent_reference
@@ -104,8 +106,9 @@ def _run_frontier(fleet, data, epochs: int, eps_grid, lr: float = LR):
         rounds=epochs, sample_frac=SAMPLE_FRAC))
     sessions = _scfl_sessions(fleet, data, epochs, eps_grid, sigmas, lr)
     states = plan_sweep(sessions, data)   # ONE batched allocation solve
-    reps = [s.run(data, rng=np.random.default_rng(0), state=st)
-            for s, st in zip(sessions, states)]
+    reps = run_sweep(sessions, data,      # ONE batched training computation
+                     rngs=[np.random.default_rng(0) for _ in sessions],
+                     states=states)
     for rep in reps:
         eps_spent, delta = rep.privacy_budget()
         emit(f"fig_privacy/{rep.label}", 0.0,

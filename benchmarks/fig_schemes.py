@@ -2,10 +2,12 @@
 low-latency wireless CFL on a heterogeneous wireless fleet.
 
 The first benchmark exercising the `repro.schemes` subsystem end-to-end:
-every configuration is a `Session` built by `make_strategy`, and EVERY
+every configuration is a `Session` built by `make_strategy`, EVERY
 allocation solve in a sweep — base CFL, weighted-server stochastic,
 partial-return low-latency — batches through one `plan_sweep` call into
-`repro.plan.solve_redundancy_batched`.
+`repro.plan.solve_redundancy_batched`, and every sweep TRAINS as one
+batched `run_sweep` computation (per-lane traces bit-identical to solo
+runs).
 
 Sections (full mode):
   * four-way head-to-head at one redundancy point;
@@ -32,7 +34,7 @@ import jax
 import numpy as np
 
 from repro.api import (Session, TrainData, convergence_time, make_strategy,
-                       plan_sweep)
+                       plan_sweep, run_sweep)
 from repro.sim.network import wireless_fleet
 
 from .common import (Timer, cfl_session, dump_bench, emit, lowlat_session,
@@ -45,9 +47,9 @@ SMOKE_PLAN_BUDGET_S = 5.0
 
 
 def _run_all(sessions, data, seed=0):
-    states = plan_sweep(sessions, data)
-    return [sess.run(data, rng=np.random.default_rng(seed), state=state)
-            for sess, state in zip(sessions, states)]
+    """One batched plan + one batched training computation."""
+    return run_sweep(sessions, data,
+                     rngs=[np.random.default_rng(seed) for _ in sessions])
 
 
 # ---------------------------------------------------------------------------
@@ -90,8 +92,10 @@ def smoke() -> None:
         assert t_plan < SMOKE_PLAN_BUDGET_S, \
             f"batched scheme planning {t_plan:.2f}s over budget " \
             f"{SMOKE_PLAN_BUDGET_S}s"
-        for s, state in zip(sess, states):
-            rep = s.run(data, rng=np.random.default_rng(0), state=state)
+        reps = run_sweep(sess, data,
+                         rngs=[np.random.default_rng(0) for _ in sess],
+                         states=states)
+        for rep in reps:
             emit(f"fig_schemes/smoke_{rep.label}", 0.0,
                  f"final_nmse={rep.final_nmse():.3e};"
                  f"t_star={rep.epoch_durations[0]:.3f}s")

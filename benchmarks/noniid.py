@@ -20,8 +20,8 @@ import numpy as np
 from repro.api import TrainData, coding_gain
 from repro.sim.network import paper_fleet
 
-from .common import D, ELL, N_DEVICES, Timer, cfl_session, emit, \
-    uncoded_session
+from .common import (
+    D, ELL, N_DEVICES, Timer, cfl_session, emit, uncoded_session)
 
 TARGET = 1e-3
 

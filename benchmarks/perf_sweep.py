@@ -1,0 +1,155 @@
+"""Micro-benchmark: the batched sweep engine vs the per-session loop.
+
+A §IV heterogeneity sweep — 16 `CodedFL` sessions at the paper's delta
+over a ladder of (nu_comp, nu_link) fleets — executed two ways:
+
+  * per-session loop — the seed behavior this PR replaces: every Session
+    owned a PRIVATE engine cache, so a 16-session sweep paid 16 separate
+    traces + XLA compiles of the same scan program before running 16
+    sequential host-dispatched scans.  (Reproduced here by clearing the
+    now-shared engine cache between runs.)
+  * `run_sweep` — ONE compiled computation for the whole sweep: the lanes
+    share a single shape bucket, compile once, and execute sharded over
+    the lane mesh (`launch.mesh.make_lane_mesh`; 4 host devices in CI).
+
+Both paths do identical host-side work (one batched `plan_sweep` solve,
+per-lane epoch sampling with per-lane generators), and their per-lane
+traces are bit-for-bit equal — asserted here on top of the dedicated
+tests — so the timing difference is purely engine architecture.
+
+    PYTHONPATH=src python -m benchmarks.perf_sweep [--epochs 600]
+    PYTHONPATH=src python -m benchmarks.perf_sweep --smoke   # CI gate
+
+`--smoke` runs the 16-session sweep at reduced epochs, asserts the
+batched path beats the per-session loop by the SPEEDUP_FLOOR (3x), and
+writes BENCH_sweep.json (records + gate values) for the CI artifact
+upload.
+"""
+from __future__ import annotations
+
+import os
+
+# a lane mesh needs >1 host device: default to one per physical core (CI's
+# workflow env pins 4 and wins when set).  Must happen before jax
+# initializes.
+os.environ.setdefault(
+    "XLA_FLAGS",
+    f"--xla_force_host_platform_device_count={os.cpu_count() or 1}")
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.api import Session, TrainData, make_strategy, plan_sweep, run_sweep
+from repro.api import session as session_mod
+from repro.sim.network import paper_fleet
+
+from .common import D, ELL, LR, M, N_DEVICES, dump_bench, emit
+
+SWEEP_LANES = 16
+DELTA = 0.28
+SPEEDUP_FLOOR = 3.0  # acceptance gate: batched >= 3x the per-session loop
+
+
+def sweep_sessions(epochs: int):
+    """The §IV heterogeneity frontier: one fleet per (nu, nu) level, all
+    lanes sharing shapes (same n, d, parity budget) => ONE engine bucket."""
+    nus = np.linspace(0.0, 0.375, SWEEP_LANES)
+    return [
+        Session(strategy=make_strategy("cfl", key_seed=100 + i,
+                                       fixed_c=int(DELTA * M),
+                                       include_upload_delay=False,
+                                       label=f"cfl_nu={nu:.3f}"),
+                fleet=paper_fleet(float(nu), float(nu), seed=0),
+                lr=LR, epochs=epochs, seed=i)
+        for i, nu in enumerate(nus)
+    ]
+
+
+def main(epochs: int = 600, smoke: bool = False) -> None:
+    data = TrainData.linreg(jax.random.PRNGKey(0), N_DEVICES, ELL, D)
+    sessions = sweep_sessions(epochs)
+
+    t0 = time.perf_counter()
+    states = plan_sweep(sessions, data)  # ONE batched solve, 16 fleets
+    t_plan = time.perf_counter() - t0
+    emit("perf_sweep/plan_sweep16", t_plan * 1e6 / len(sessions),
+         f"sessions={len(sessions)};one_batched_solve={t_plan:.2f}s")
+
+    # --- per-session loop (seed behavior: a fresh trace+compile per
+    # Session — private engine caches) -------------------------------------
+    t0 = time.perf_counter()
+    loop_reports = []
+    for sess, state in zip(sessions, states):
+        session_mod._ENGINE_CACHE.clear()  # what per-Session caching cost
+        loop_reports.append(
+            sess.run(data, rng=np.random.default_rng(sess.seed),
+                     state=state))
+    t_loop = time.perf_counter() - t0
+
+    # --- batched sweep engine: one compile, lanes sharded over the mesh ---
+    session_mod._ENGINE_CACHE.clear()  # cold, same as the loop above
+    t0 = time.perf_counter()
+    sweep_reports = run_sweep(sessions, data, states=states)
+    t_sweep = time.perf_counter() - t0
+
+    # warm repeat: engine execution only (compile amortized away)
+    t0 = time.perf_counter()
+    run_sweep(sessions, data, states=states)
+    t_sweep_warm = time.perf_counter() - t0
+
+    # parity spot-check on top of tests/test_run_sweep.py: the two paths
+    # must be the same computation, or the comparison is meaningless
+    for a, b in zip(loop_reports, sweep_reports):
+        np.testing.assert_array_equal(a.nmse, b.nmse)
+
+    speedup = t_loop / t_sweep
+    from repro.launch.mesh import lane_mesh_size
+    n_mesh = lane_mesh_size(len(sessions))
+    emit("perf_sweep/per_session_loop", t_loop * 1e6 / len(sessions),
+         f"total={t_loop:.2f}s;compiles={len(sessions)}")
+    emit("perf_sweep/run_sweep_cold", t_sweep * 1e6 / len(sessions),
+         f"total={t_sweep:.2f}s;compiles=1;mesh_devices={n_mesh}")
+    emit("perf_sweep/run_sweep_warm", t_sweep_warm * 1e6 / len(sessions),
+         f"total={t_sweep_warm:.2f}s")
+    emit("perf_sweep/speedup", 0.0,
+         f"batched_over_loop={speedup:.1f}x;floor={SPEEDUP_FLOOR}x;"
+         f"lanes={len(sessions)};epochs={epochs}")
+    print(f"\n16-session §IV sweep: per-session loop {t_loop:.2f}s -> "
+          f"run_sweep {t_sweep:.2f}s cold / {t_sweep_warm:.2f}s warm "
+          f"({speedup:.1f}x, one compiled computation, "
+          f"{n_mesh}-device lane mesh)")
+
+    if smoke:
+        # artifact FIRST: a regression is exactly when the measured values
+        # must survive into the uploaded BENCH_sweep.json
+        try:
+            assert speedup >= SPEEDUP_FLOOR, \
+                f"batched sweep only {speedup:.2f}x over the per-session " \
+                f"loop (floor {SPEEDUP_FLOOR}x)"
+        finally:
+            dump_bench("sweep", gates={
+                "lanes": len(sessions),
+                "epochs": epochs,
+                "mesh_devices": n_mesh,
+                "plan_sweep_s": round(t_plan, 4),
+                "per_session_loop_s": round(t_loop, 4),
+                "run_sweep_cold_s": round(t_sweep, 4),
+                "run_sweep_warm_s": round(t_sweep_warm, 4),
+                "speedup": round(speedup, 2),
+                "speedup_floor": SPEEDUP_FLOOR,
+            })
+        print("perf_sweep --smoke OK (speedup floor held)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=600)
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI mode: reduced epochs, assert the "
+                         "speedup floor, write BENCH_sweep.json")
+    args = ap.parse_args()
+    main(epochs=150 if args.smoke and args.epochs == 600 else args.epochs,
+         smoke=args.smoke)

@@ -9,14 +9,16 @@
 # Stages (each reports its own wall time; the first failure stops the run
 # and prints which stage died):
 #
-#   lint           ruff check + ruff format --check (pyproject.toml
-#                  config; SKIPPED with a notice when ruff is absent —
-#                  the GitHub workflow always installs it)
+#   lint           ruff check + ruff format --check, both hard gates
+#                  (pyproject.toml config; SKIPPED with a notice when
+#                  ruff is absent — the GitHub workflow always installs
+#                  it)
 #   tests          tier-1 pytest (the ROADMAP verify command)
 #   quickstart     examples/quickstart.py --epochs 30 smoke
 #   perf-smoke     planner-latency budget gate  -> BENCH_perf.json
 #   schemes-smoke  scheme sanity + plan budget  -> BENCH_schemes.json
 #   privacy-smoke  DP calibration + frontier    -> BENCH_privacy.json
+#   sweep-smoke    batched sweep engine >= 3x   -> BENCH_sweep.json
 #   perf-full      (--perf only) full session micro-benchmark
 #
 # The BENCH_*.json artifacts are machine-readable (timings + gate
@@ -69,16 +71,9 @@ lint() {
         return 0
     fi
     ruff check .
-    # The format check is report-only until the pre-existing codebase is
-    # migrated to ruff-format style (`ruff format .` + one review pass);
-    # set RUFF_FORMAT_STRICT=1 to make it a hard gate after that.
-    if [[ "${RUFF_FORMAT_STRICT:-0}" == "1" ]]; then
-        ruff format --check .
-    else
-        ruff format --check . \
-            || echo "WARN: ruff format --check found unformatted files" \
-                    "(advisory until RUFF_FORMAT_STRICT=1)"
-    fi
+    # hard gate since the tree-wide format migration: run `ruff format .`
+    # before committing when this trips
+    ruff format --check .
 }
 
 run_stage lint lint
@@ -89,6 +84,7 @@ if [[ "$TIER" != "fast" ]]; then
     run_stage perf-smoke python -m benchmarks.perf_session --smoke
     run_stage schemes-smoke python -m benchmarks.fig_schemes --smoke
     run_stage privacy-smoke python -m benchmarks.fig_privacy --smoke
+    run_stage sweep-smoke python -m benchmarks.perf_sweep --smoke
 fi
 
 if [[ "$TIER" == "perf" ]]; then

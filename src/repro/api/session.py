@@ -1,5 +1,4 @@
-"""`Session`: the single scan-jitted epoch engine behind every entry point,
-plus `plan_sweep`, which batches the planning step across many sessions.
+"""`Session` and the batched sweep engine.
 
 One `Session` replaces the three copy-pasted Python epoch loops that used to
 live in `sim.simulator.run_uncoded` / `run_cfl`, `fed.trainer`, and the
@@ -10,6 +9,19 @@ jitted `jax.lax.scan`.  The device is synced exactly once per run (to fetch
 the final NMSE trace) instead of once per epoch, which is what dominated
 wall time at small `d`.
 
+Since the sweep-engine refactor the scan body lives in a PURE BATCHED CORE:
+a solo `Session.run` is a size-1 batch of the same compiled computation
+that `run_sweep` uses to execute a whole sweep of sessions at once.  Lanes
+(sessions) are grouped into shape buckets — same strategy static structure,
+same operand shapes — and each bucket compiles ONE engine: a
+`jax.lax.map` over the per-device lanes inside a `shard_map` over the lane
+mesh (`repro.launch.mesh.make_lane_mesh`).  Every lane therefore executes
+the exact same unbatched per-lane program whether it runs alone or in a
+64-lane sweep, which is what makes the per-lane traces bit-for-bit equal
+to solo runs (`tests/test_run_sweep.py`) — a `vmap` over lanes would not
+be: XLA:CPU's batched/gemm lowerings change last-ulp results with the
+batch size.
+
 Lifecycle:
 
     data    = TrainData.linreg(jax.random.PRNGKey(0), n=24, ell=300, d=500)
@@ -19,19 +31,28 @@ Lifecycle:
                       fleet=fleet, lr=0.0085, epochs=600)
     report  = session.run(data)          # -> TraceReport
 
-Compiled engines are cached on the session keyed by the strategy's static
-structure and the data/arrival shapes, so sweeps that reuse a session (or
-re-run it with fresh randomness) pay for tracing once.
+    # a whole sweep: one batched planning solve + one compiled engine
+    # per shape bucket, sharded over the device mesh
+    reports = run_sweep([session_a, session_b, ...], data)
+
+Compiled engines are cached at MODULE level, keyed by the strategy's full
+static structure (every primitive dataclass field that could steer the
+trace, not just `engine_key`) plus the operand shapes and the lane count —
+so sweeps, re-runs, and sessions cloned via `dataclasses.replace` share
+compiled engines exactly when their traced computation is identical, and
+never otherwise.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Any, Dict, Hashable, List, Optional, \
-    Sequence
+from typing import (TYPE_CHECKING, Any, Callable, Dict, Hashable, List,
+                    Optional, Sequence)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation
 
@@ -40,6 +61,191 @@ from .strategy import EpochSchedule, Strategy, TrainData
 
 if TYPE_CHECKING:  # annotation-only: keeps the api layer free of sim imports
     from repro.sim.network import FleetSpec
+
+# Compiled sweep engines, shared by every Session in the process: one entry
+# per (strategy static structure, operand shapes, lane count).  A 16-lane
+# delta sweep compiles once per shape bucket instead of once per Session,
+# and solo re-runs of equivalent sessions never retrace.  Each engine's
+# closure pins its bucket's first strategy state (which can hold MB-scale
+# parity arrays), so the cache is BOUNDED: oldest entries evict once
+# _ENGINE_CACHE_MAX distinct (bucket, lane-count) engines exist, instead
+# of growing for process lifetime.
+_ENGINE_CACHE: Dict[Hashable, Callable] = {}
+_ENGINE_CACHE_MAX = 64
+
+_PRIMITIVES = (bool, int, float, str, bytes, type(None))
+
+
+def _static_strategy_key(strategy: Strategy) -> Hashable:
+    """Full static identity of a strategy's traced computation.
+
+    Includes the class (module-qualified) and every primitive-valued
+    dataclass field, EXCEPT `label` (display-only by protocol) and the
+    fields the strategy declares in `engine_value_fields` — knobs that
+    only change operand VALUES (plan inputs, host-side sampling, report
+    metadata), never the traced engine.  Array-valued fields (PRNG keys,
+    pre-solved plans) only ever feed operand values and are skipped.
+
+    Keying on everything static by default means a strategy whose
+    `engine_key` under-reports (the historical failure mode: clone a
+    session via `dataclasses.replace` with a changed static field and
+    silently reuse the old compiled engine) still never shares a compiled
+    engine across trace-relevant differences.
+    """
+    cls = type(strategy)
+    parts: List[Any] = [f"{cls.__module__}.{cls.__qualname__}"]
+    skip = set(getattr(strategy, "engine_value_fields", ())) | {"label"}
+    if dataclasses.is_dataclass(strategy):
+        fields = [f.name for f in dataclasses.fields(strategy)]
+    else:  # non-dataclass user strategies: their primitive attributes
+        fields = sorted(k for k in getattr(strategy, "__dict__", {}))
+    for name in fields:
+        if name in skip:
+            continue
+        value = getattr(strategy, name)
+        if isinstance(value, _PRIMITIVES):
+            parts.append((name, type(value).__name__, value))
+    return tuple(parts)
+
+
+def _tree_shape_key(tree: Dict[str, Any]) -> Hashable:
+    return tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                        for k, v in tree.items()))
+
+
+def _bucket_key(strategy: Strategy, state: Any, data: TrainData,
+                dev: Dict[str, jax.Array],
+                arrivals: Dict[str, np.ndarray]) -> Hashable:
+    """Sessions with equal keys run as lanes of one compiled engine."""
+    return (_static_strategy_key(strategy),
+            strategy.engine_key(state),
+            data.m, data.d, str(data.xs.dtype),
+            _tree_shape_key(dev), _tree_shape_key(arrivals))
+
+
+def _build_engine(strategy: Strategy, state: Any, data: TrainData,
+                  shared: Dict[str, jax.Array], args: tuple) -> Callable:
+    """Compile the batched engine for one shape bucket.
+
+    `shared` holds the lane-invariant device operands (the strategy's
+    declared `data_device_keys` plus `beta_true`), replicated across the
+    mesh instead of stacked B times — the training matrices are the bulk
+    of the operand bytes and every lane reads the same ones.  `args` =
+    (dev_lanes, arrivals, lr), every leaf stacked on a leading lane axis
+    of size B.  The per-lane program is the classic solo scan engine;
+    lanes are split over the lane mesh by `shard_map` and iterated per
+    device with `jax.lax.map`, so each lane's arithmetic is identical at
+    every B (the bit-for-bit guarantee — see module docstring).
+    """
+    from repro.launch.mesh import make_lane_mesh
+    from repro.launch.sharding import lane_specs
+
+    m, d, dtype = data.m, data.d, data.xs.dtype
+    n_lanes = jax.tree.leaves(args)[0].shape[0]
+    mesh = make_lane_mesh(n_lanes)
+
+    def lanes(shared_op, *lane_args):
+        beta_true = shared_op.pop("beta_true")
+
+        def lane(op):
+            dev_lane, arr, lr = op
+            dev = {**shared_op, **dev_lane}
+            # lr rides in as a per-lane scalar operand: identical
+            # arithmetic to the legacy closed-over constant
+            m_s = jnp.asarray(m, dtype=jnp.int32)
+            beta0 = jnp.zeros(d, dtype=dtype)
+
+            def step(beta, arr_t):
+                g = strategy.round_contributions(state, dev, beta, arr_t)
+                beta = aggregation.gd_update(beta, g, lr, m_s)
+                return beta, aggregation.nmse(beta, beta_true)
+
+            _, trace = jax.lax.scan(step, beta0, arr)
+            nmse0 = aggregation.nmse(beta0, beta_true)
+            return jnp.concatenate([nmse0[None], trace])
+
+        return jax.lax.map(lane, lane_args)
+
+    replicated = jax.tree.map(lambda leaf: P(), shared)
+    fn = shard_map(lanes, mesh=mesh,
+                   in_specs=(replicated,) + tuple(
+                       lane_specs(a) for a in args),
+                   out_specs=P("lanes"))
+    return jax.jit(fn)
+
+
+def _execute_lanes(entries: Sequence[tuple],
+                   data: TrainData) -> List[np.ndarray]:
+    """Run every (session, state, schedule) lane through the batched core.
+
+    Lanes are grouped into shape buckets; each bucket stacks its operands,
+    fetches (or compiles) its engine from the module cache and executes
+    all its lanes in one sharded call.  Returns each lane's (epochs+1,)
+    NMSE trace, in order.
+    """
+    devs: List[Dict[str, jax.Array]] = []
+    arrs: List[Dict[str, np.ndarray]] = []
+    buckets: Dict[Hashable, List[int]] = {}
+    for i, (sess, state, sched) in enumerate(entries):
+        dev = sess.strategy.device_state(state, data)
+        arr = {k: np.asarray(v) for k, v in sched.arrivals.items()}
+        devs.append(dev)
+        arrs.append(arr)
+        key = _bucket_key(sess.strategy, state, data, dev, arr)
+        buckets.setdefault(key, []).append(i)
+
+    dtype = data.xs.dtype
+    traces: List[Optional[np.ndarray]] = [None] * len(entries)
+    for key, idxs in buckets.items():
+        b = len(idxs)
+        sess0, state0, _ = entries[idxs[0]]
+        # operands the strategy declares as pure functions of `data` are
+        # lane-invariant within one call: pass ONE copy, replicated, and
+        # stack only the genuinely per-lane state
+        data_keys = set(getattr(sess0.strategy, "data_device_keys", ())) \
+            & set(devs[idxs[0]])
+        shared = {k: devs[idxs[0]][k] for k in data_keys}
+        shared["beta_true"] = data.beta_true
+        dev_b = {k: jnp.stack([devs[i][k] for i in idxs])
+                 for k in devs[idxs[0]] if k not in data_keys}
+        arr_b = {k: jnp.asarray(np.stack([arrs[i][k] for i in idxs]))
+                 for k in arrs[idxs[0]]}
+        lr_b = jnp.asarray(np.asarray([entries[i][0].lr for i in idxs]),
+                           dtype=dtype)
+        args = (dev_b, arr_b, lr_b)
+
+        engine_key = (key, b)
+        engine = _ENGINE_CACHE.get(engine_key)
+        if engine is None:
+            engine = _build_engine(sess0.strategy, state0, data, shared,
+                                   args)
+            while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
+                _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+            _ENGINE_CACHE[engine_key] = engine
+        out = np.asarray(engine(shared, *args))
+        for j, i in enumerate(idxs):
+            traces[i] = out[j]
+            # per-session mirror: introspection + lifetime of the session
+            entries[i][0]._engines[engine_key] = engine
+    return traces  # type: ignore[return-value]
+
+
+def _lane_report(session: "Session", state: Any, sched: EpochSchedule,
+                 nmse_trace: np.ndarray,
+                 label: Optional[str] = None) -> TraceReport:
+    """Assemble the TraceReport for one lane — ONE code path for solo runs
+    and sweep lanes, so their reports cannot drift."""
+    times = sched.t0 + np.concatenate([[0.0], np.cumsum(sched.durations)])
+    extras_fn = getattr(session.strategy, "report_extras", None)
+    return TraceReport(
+        times=times,
+        nmse=nmse_trace,
+        epoch_durations=np.asarray(sched.durations),
+        label=label if label is not None else session.strategy.label,
+        setup_time=sched.setup_time,
+        uplink_bits_total=session.strategy.uplink_bits(
+            state, session.fleet, session.epochs),
+        extras=dict(extras_fn(state)) if extras_fn is not None else {})
 
 
 @dataclasses.dataclass
@@ -64,43 +270,9 @@ class Session:
     def __post_init__(self):
         if self.epochs < 0:
             raise ValueError(f"epochs must be >= 0, got {self.epochs}")
-        self._engines: Dict[Hashable, callable] = {}
-
-    # -- engine ------------------------------------------------------------
-
-    def _engine(self, state, data: TrainData,
-                dev: Dict[str, jax.Array], arrivals: Dict[str, jax.Array]):
-        key = (type(self.strategy).__name__,
-               self.strategy.engine_key(state),
-               float(self.lr), data.m, str(data.xs.dtype),
-               tuple(sorted((k, v.shape) for k, v in dev.items())),
-               tuple(sorted((k, v.shape) for k, v in arrivals.items())))
-        fn = self._engines.get(key)
-        if fn is not None:
-            return fn
-
-        strategy, lr, m, d = self.strategy, self.lr, data.m, data.d
-        dtype = data.xs.dtype
-
-        def engine(dev, beta_true, arr):
-            # lr/m as on-device scalars: identical arithmetic to the legacy
-            # eager `gd_update(beta, g, lr, m)` jitted call
-            lr_s = jnp.asarray(lr, dtype=dtype)
-            m_s = jnp.asarray(m, dtype=jnp.int32)
-            beta0 = jnp.zeros(d, dtype=dtype)
-
-            def step(beta, arr_t):
-                g = strategy.round_contributions(state, dev, beta, arr_t)
-                beta = aggregation.gd_update(beta, g, lr_s, m_s)
-                return beta, aggregation.nmse(beta, beta_true)
-
-            _, trace = jax.lax.scan(step, beta0, arr)
-            nmse0 = aggregation.nmse(beta0, beta_true)
-            return jnp.concatenate([nmse0[None], trace])
-
-        fn = jax.jit(engine)
-        self._engines[key] = fn
-        return fn
+        # local view into the shared module-level engine cache (see
+        # _execute_lanes); compiled engines outlive any one session
+        self._engines: Dict[Hashable, Callable] = {}
 
     # -- public API --------------------------------------------------------
 
@@ -113,31 +285,16 @@ class Session:
             rng: Optional[np.random.Generator] = None,
             label: Optional[str] = None, state=None) -> TraceReport:
         """Plan (unless a pre-planned `state` is given), pre-sample, and
-        execute the full training trace."""
+        execute the full training trace — a size-1 batch of the shared
+        sweep engine."""
         if rng is None:
             rng = np.random.default_rng(self.seed)
         if state is None:
             state = self.strategy.plan(self.fleet, data)
         sched: EpochSchedule = self.strategy.sample_epochs(
             state, self.fleet, self.epochs, rng)
-
-        dev = self.strategy.device_state(state, data)
-        arrivals = {k: jnp.asarray(v) for k, v in sched.arrivals.items()}
-        engine = self._engine(state, data, dev, arrivals)
-        nmse_trace = np.asarray(engine(dev, data.beta_true, arrivals))
-
-        times = sched.t0 + np.concatenate(
-            [[0.0], np.cumsum(sched.durations)])
-        extras_fn = getattr(self.strategy, "report_extras", None)
-        return TraceReport(
-            times=times,
-            nmse=nmse_trace,
-            epoch_durations=np.asarray(sched.durations),
-            label=label if label is not None else self.strategy.label,
-            setup_time=sched.setup_time,
-            uplink_bits_total=self.strategy.uplink_bits(
-                state, self.fleet, self.epochs),
-            extras=dict(extras_fn(state)) if extras_fn is not None else {})
+        nmse_trace = _execute_lanes([(self, state, sched)], data)[0]
+        return _lane_report(self, state, sched, nmse_trace, label)
 
 
 def plan_sweep(sessions: Sequence[Session], data: TrainData) -> List[Any]:
@@ -153,7 +310,8 @@ def plan_sweep(sessions: Sequence[Session], data: TrainData) -> List[Any]:
     `redundancy_plan`) falls back to its own `plan`.
 
     Returns one strategy state per session, in order; pass each to
-    `Session.run(data, state=...)`.
+    `Session.run(data, state=...)` or all of them to
+    `run_sweep(..., states=...)`.
     """
     states: List[Any] = [None] * len(sessions)
     batched: List[int] = []
@@ -174,3 +332,54 @@ def plan_sweep(sessions: Sequence[Session], data: TrainData) -> List[Any]:
         if states[i] is None:
             states[i] = sess.plan(data)
     return states
+
+
+def run_sweep(sessions: Sequence[Session], data: TrainData,
+              rngs: Optional[Sequence[np.random.Generator]] = None,
+              states: Optional[Sequence[Any]] = None) -> List[TraceReport]:
+    """Execute a whole sweep of sessions as one batched computation.
+
+    The three phases, each batched:
+
+      1. planning — `plan_sweep` collects every session's allocation solve
+         into one `repro.plan.solve_redundancy_batched` call (skipped for
+         pre-planned `states`);
+      2. sampling — each lane pre-samples its own epoch randomness on the
+         host via the strategy's `sweep_inputs` hook (falling back to
+         `sample_epochs`), with a PER-LANE generator so the draw order is
+         identical to a solo `Session.run`;
+      3. training — lanes are grouped into shape buckets (strategy static
+         structure + operand shapes) and each bucket runs as ONE compiled
+         engine, sharded over the lane mesh.
+
+    Per-lane results — NMSE trace, wall-clock times, `TraceReport.extras`
+    — are bit-for-bit identical to running each session solo with the
+    same generator.
+
+    rngs:   one generator per session (default: a fresh
+            `np.random.default_rng(session.seed)` each, matching the solo
+            `run` default)
+    states: pre-planned strategy states (e.g. from `plan_sweep`, to time
+            or amortize planning separately)
+    """
+    sessions = list(sessions)
+    if states is None:
+        states = plan_sweep(sessions, data)
+    elif len(states) != len(sessions):
+        raise ValueError(
+            f"got {len(states)} states for {len(sessions)} sessions")
+    if rngs is None:
+        rngs = [np.random.default_rng(sess.seed) for sess in sessions]
+    elif len(rngs) != len(sessions):
+        raise ValueError(
+            f"got {len(rngs)} generators for {len(sessions)} sessions")
+
+    entries = []
+    for sess, state, rng in zip(sessions, states, rngs):
+        sample = getattr(sess.strategy, "sweep_inputs",
+                         sess.strategy.sample_epochs)
+        entries.append((sess, state,
+                        sample(state, sess.fleet, sess.epochs, rng)))
+    traces = _execute_lanes(entries, data)
+    return [_lane_report(sess, state, sched, trace)
+            for (sess, state, sched), trace in zip(entries, traces)]

@@ -43,8 +43,9 @@ PAPERS.md) live in `repro.schemes`; construct any scheme by name via
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Any, Dict, Hashable, Optional, Protocol, \
-    runtime_checkable
+from typing import (
+    TYPE_CHECKING, Any, ClassVar, Dict, Hashable, Optional, Protocol,
+    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -159,7 +160,28 @@ class Strategy(Protocol):
     #   * plan_request(fleet, data) -> repro.plan.PlanRequest and
     #     plan_with(fleet, data, plan) -> state — expose them to let
     #     `api.plan_sweep` batch the strategy's allocation solve with every
-    #     other session's into one jitted grid solve.
+    #     other session's into one jitted grid solve;
+    #   * sweep_inputs(state, fleet, epochs, rng) -> EpochSchedule — one
+    #     sweep lane's per-epoch inputs for `api.run_sweep`.  Contract:
+    #     every arrival tensor's shape is a function of the engine-static
+    #     structure only (so lanes of one shape bucket stack), and the
+    #     generator draw order is identical to `sample_epochs` (so sweep
+    #     lanes are bit-for-bit equal to solo runs).  `run_sweep` falls
+    #     back to `sample_epochs` when absent;
+    #   * engine_value_fields: frozenset of dataclass field names that only
+    #     feed operand VALUES (plan inputs, host-side sampling, report
+    #     metadata) and never steer the traced engine.  The sweep engine
+    #     keys its compiled-engine cache on every OTHER primitive field
+    #     (plus `engine_key`), so declaring a field here lets lanes that
+    #     differ only in that knob share one compiled engine; omitting a
+    #     declaration is always safe, merely over-fragmenting buckets;
+    #   * data_device_keys: frozenset of `device_state` keys whose arrays
+    #     are pure functions of the TrainData alone (the flat training
+    #     matrices, typically).  All lanes of one `run_sweep(sessions,
+    #     data)` call see the same data, so the sweep engine ships ONE
+    #     replicated copy of these operands instead of stacking them B
+    #     times.  Omitting the declaration is always safe (everything is
+    #     stacked per lane).
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +198,11 @@ class UncodedFL:
     """Synchronous uncoded FL: every epoch waits for all n clients (Eq. 2)."""
 
     label: str = "uncoded"
+
+    # no strategy knob steers the traced engine (label is display-only)
+    engine_value_fields: ClassVar[frozenset] = frozenset()
+    # the flat training matrices are data-only: one replicated copy per sweep
+    data_device_keys: ClassVar[frozenset] = frozenset({"x", "y"})
 
     def plan(self, fleet: "FleetSpec", data: TrainData) -> UncodedState:
         return UncodedState(loads=np.full(data.n, data.ell))
@@ -205,6 +232,12 @@ class UncodedFL:
 
     def engine_key(self, state: UncodedState) -> Hashable:
         return ()
+
+    def sweep_inputs(self, state: UncodedState, fleet: "FleetSpec",
+                     epochs: int, rng: np.random.Generator) -> EpochSchedule:
+        """One sweep lane's inputs: the (epochs,) placeholder tensor stacks
+        across any uncoded lanes; draws are exactly `sample_epochs`."""
+        return self.sample_epochs(state, fleet, epochs, rng)
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +269,17 @@ class CodedFL:
     generator: str = "normal"
     label: str = "cfl"
     redundancy_plan: Optional["RedundancyPlan"] = None
+
+    # knobs that only shape the plan / host-side sampling, never the traced
+    # engine: lanes differing in them share one compiled sweep engine
+    # (use_kernel stays keyed — it swaps the parity-gradient code path)
+    engine_value_fields: ClassVar[frozenset] = frozenset(
+        {"fixed_c", "c_up", "include_upload_delay", "server_always_returns",
+         "generator"})
+    # data-only operands (one replicated copy per sweep); the plan-derived
+    # load mask and parity shards stay per-lane
+    data_device_keys: ClassVar[frozenset] = frozenset(
+        {"x", "y", "row_client"})
 
     def plan(self, fleet: "FleetSpec", data: TrainData) -> cfl.CFLState:
         return self.plan_with(fleet, data, self.redundancy_plan)
@@ -309,6 +353,14 @@ class CodedFL:
     def engine_key(self, state: cfl.CFLState) -> Hashable:
         return (state.c > 0, self.use_kernel)
 
+    def sweep_inputs(self, state: cfl.CFLState, fleet: "FleetSpec",
+                     epochs: int, rng: np.random.Generator) -> EpochSchedule:
+        """One sweep lane's inputs: `received (epochs, n)` and
+        `parity_ok (epochs,)` stack across every CFL lane sharing the fleet
+        size; draws are exactly `sample_epochs` (upload first, then the
+        per-epoch edge/server stream)."""
+        return self.sample_epochs(state, fleet, epochs, rng)
+
 
 # ---------------------------------------------------------------------------
 # Gradient coding (Tandon et al., the paper's ref [5])
@@ -335,6 +387,12 @@ class GradientCodingFL:
 
     r: int
     label: str = "gradcode"
+
+    # r shapes the plan (groups) only; the traced engine sees it through
+    # `engine_key` (n_groups) and the arrival/device tensor shapes
+    engine_value_fields: ClassVar[frozenset] = frozenset({"r"})
+    # the flat matrices are data-only; row_group is plan-derived (per lane)
+    data_device_keys: ClassVar[frozenset] = frozenset({"x", "y"})
 
     def plan(self, fleet: "FleetSpec", data: TrainData) -> GradCodingState:
         plan = make_plan(data.n, self.r)
@@ -391,3 +449,11 @@ class GradientCodingFL:
 
     def engine_key(self, state: GradCodingState) -> Hashable:
         return (state.n_groups,)
+
+    def sweep_inputs(self, state: GradCodingState, fleet: "FleetSpec",
+                     epochs: int, rng: np.random.Generator) -> EpochSchedule:
+        """One sweep lane's inputs: `group_ok (epochs, n_groups)` stacks
+        across lanes with equal replication structure (n_groups is in
+        `engine_key`, so mixed-r sweeps bucket apart); draws are exactly
+        `sample_epochs`."""
+        return self.sample_epochs(state, fleet, epochs, rng)

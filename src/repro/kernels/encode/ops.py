@@ -1,6 +1,6 @@
 """jit'd wrappers for the fused parity-encoding kernels (interpret on CPU).
 
-Two entry points:
+Three entry points:
 
   * `encode_parity` — one client's P = G (W X) with the diagonal weighting
     fused into the matmul (the original kernel).
@@ -10,12 +10,19 @@ Two entry points:
     (c, d+1) composite.  The streaming itself is shared with the reference
     path (`core.encoding.encode_fleet_streamed`) so both paths draw
     identical G_i; only the per-client matmul differs (Pallas here).
+  * `encode_fleet_prng` — the fleet encoder with IN-KERNEL generators: no
+    client ever materializes its (c, ell) G_i — each generator tile is
+    regenerated inside the kernel from the client's key via the
+    counter-based threefry tiles of `encode.encode_parity_prng`, drawing
+    bit-identical entries to the host-PRNG paths above (same
+    `jax.random.split` layout, same bits-to-float path).
 """
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from . import encode as _k
 from . import ref as _ref
@@ -50,5 +57,42 @@ def encode_fleet(keys: jax.Array, xs: jax.Array, ys: jax.Array,
         partial(encode_parity, block=block, force_interpret=force_interpret))
 
 
+def encode_parity_prng(key: jax.Array, w: jax.Array, x: jax.Array, c: int,
+                       kind: str = "normal", block=_k.DEFAULT_BLOCK,
+                       force_interpret: bool = False) -> jax.Array:
+    return _k.encode_parity_prng(key, w, x, c, kind=kind, block=block,
+                                 interpret=force_interpret or not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("c", "kind", "block", "force_interpret"))
+def encode_fleet_prng(key: jax.Array, xs: jax.Array, ys: jax.Array,
+                      weights: jax.Array, c: int, kind: str = "normal",
+                      block=_k.DEFAULT_BLOCK, force_interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Streamed fleet encoding with in-kernel generators: (X~, y~) with NO
+    (c, ell) generator block ever materialized, per client or otherwise.
+
+    key: the fleet key — split per client exactly like
+         `core.encoding.encode_fleet`, so the drawn G_i (and therefore the
+         composite parity, up to matmul-tiling rounding) match the
+         host-PRNG paths.
+    xs: (n, ell, d), ys: (n, ell), weights: (n, ell)
+    """
+    n, ell, d = xs.shape
+    keys = jax.random.split(key, n)
+    xa = jnp.concatenate([xs, ys[..., None]], axis=-1)  # labels ride along
+
+    def one(acc, inp):
+        k, x, w = inp
+        p = encode_parity_prng(k, w, x, c, kind=kind, block=block,
+                               force_interpret=force_interpret)
+        return acc + p, None
+
+    acc, _ = jax.lax.scan(one, jnp.zeros((c, d + 1), dtype=xs.dtype),
+                          (keys, xa, weights))
+    return acc[:, :d], acc[:, d]
+
+
+generator_values = _k.generator_values
 reference = _ref.encode_parity
 reference_fleet = _ref.encode_fleet

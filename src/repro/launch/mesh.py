@@ -35,6 +35,33 @@ def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
+def lane_mesh_size(n_lanes: int) -> int:
+    """Device count for a sweep's lane axis: the largest divisor of
+    `n_lanes` that fits the local device count.
+
+    Divisibility is required (lanes are split evenly across the mesh by
+    `shard_map`), and an even split keeps every lane's per-device program
+    identical — the sweep engine's bit-for-bit-with-solo guarantee rides
+    on it.  A 16-lane sweep on the CI topology (4 host devices) uses all
+    4; a 5-lane sweep uses 1.
+    """
+    if n_lanes < 1:
+        raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+    return next(k for k in range(min(len(jax.devices()), n_lanes), 0, -1)
+                if n_lanes % k == 0)
+
+
+def make_lane_mesh(n_lanes: int) -> jax.sharding.Mesh:
+    """1-d mesh over the lane (batch-of-sessions) axis of a sweep.
+
+    The sweep engine (`repro.api.run_sweep`) shards its stacked per-lane
+    operands over this mesh; each device runs its lanes' scans locally, so
+    the mesh size never changes any lane's arithmetic.
+    """
+    k = lane_mesh_size(n_lanes)
+    return jax.sharding.Mesh(jax.devices()[:k], ("lanes",))
+
+
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """The batch-parallel axes of a mesh (includes 'pod' when present)."""
     names = mesh.axis_names

@@ -223,3 +223,20 @@ def opt_state_shardings(mesh: Mesh, param_sh: Any, opt_state_shape: Any,
 
 def replicated(mesh: Mesh, tree: Any) -> Any:
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def lane_specs(tree: Any) -> Any:
+    """PartitionSpecs splitting every leaf's leading axis over "lanes".
+
+    The layout of the sweep engine's stacked operands (`repro.api.
+    run_sweep`): axis 0 is the session lane, everything behind it is
+    per-lane state and stays unsharded.
+    """
+    return jax.tree.map(
+        lambda leaf: P("lanes", *([None] * (leaf.ndim - 1))), tree)
+
+
+def lane_shardings(mesh: Mesh, tree: Any) -> Any:
+    """NamedShardings for `lane_specs` on a `make_lane_mesh` mesh."""
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        lane_specs(tree))

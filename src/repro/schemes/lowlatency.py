@@ -29,7 +29,7 @@ Parity oracle: `repro.plan.reference_schemes.solve_lowlatency_reference`.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, Hashable, Optional
+from typing import TYPE_CHECKING, ClassVar, Dict, Hashable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +84,16 @@ class LowLatencyCFL:
     generator: str = "normal"
     label: str = "lowlat"
     redundancy_plan: Optional[RedundancyPlan] = None
+
+    # all knobs (chunks included) reach the traced engine only through
+    # operand values — row_chunk ids, chunks_done counts, the plan — so
+    # a whole chunking/heterogeneity sweep shares one compiled engine
+    engine_value_fields: ClassVar[frozenset] = frozenset(
+        {"chunks", "fixed_c", "c_up", "include_upload_delay", "generator"})
+    # data-only operands (one replicated copy per sweep); row_chunk is
+    # plan-derived and stays per-lane
+    data_device_keys: ClassVar[frozenset] = frozenset(
+        {"x", "y", "row_client"})
 
     def __post_init__(self):
         if self.chunks < 1:
@@ -210,6 +220,15 @@ class LowLatencyCFL:
 
     def engine_key(self, state: LowLatencyState) -> Hashable:
         return (state.c > 0,)
+
+    def sweep_inputs(self, state: LowLatencyState, fleet: "FleetSpec",
+                     epochs: int, rng: np.random.Generator) -> EpochSchedule:
+        """One sweep lane's inputs: `chunks_done (epochs, n)` (per-device
+        completed-chunk counts) and `parity_ok (epochs,)` stack across
+        lanes sharing the fleet size and parity budget; draws are exactly
+        `sample_epochs` (component draws mirror `sample_total`'s order, so
+        chunks=1 lanes remain bit-equal to CodedFL lanes)."""
+        return self.sample_epochs(state, fleet, epochs, rng)
 
     def report_extras(self, state: LowLatencyState) -> Dict[str, float]:
         return {"chunks": float(self.chunks),

@@ -52,7 +52,7 @@ module docs for the exact order grid and conversion.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, Hashable, Optional
+from typing import TYPE_CHECKING, ClassVar, Dict, Hashable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +120,18 @@ class StochasticCodedFL:
     epsilon_target: Optional[float] = None
     delta: float = 1e-5
     rounds: Optional[int] = None
+
+    # noise / budget knobs feed the plan, the encoded values and the DP
+    # accounting report — never the traced engine — so a whole
+    # noise/epsilon frontier shares ONE compiled sweep engine.
+    # sample_frac stays keyed: it is baked into the traced 1/(c*rho).
+    engine_value_fields: ClassVar[frozenset] = frozenset(
+        {"fixed_c", "c_up", "include_upload_delay", "generator",
+         "noise_multiplier", "epsilon_target", "delta", "rounds"})
+    # data-only operands (one replicated copy per sweep); the noised
+    # parity shards and load mask stay per-lane
+    data_device_keys: ClassVar[frozenset] = frozenset(
+        {"x", "y", "row_client"})
 
     def __post_init__(self):
         if not (0.0 < self.sample_frac <= 1.0):
@@ -285,6 +297,16 @@ class StochasticCodedFL:
     def engine_key(self, state: StochasticState) -> Hashable:
         # sample_frac is baked into the traced 1/(c*rho) constant
         return (state.c > 0, float(self.sample_frac))
+
+    def sweep_inputs(self, state: StochasticState, fleet: "FleetSpec",
+                     epochs: int, rng: np.random.Generator) -> EpochSchedule:
+        """One sweep lane's inputs: `received (epochs, n)`,
+        `parity_mask (epochs, c)` and `parity_ok (epochs,)` stack across
+        lanes sharing the fleet size and parity budget (c is an operand
+        shape, so mixed-c sweeps bucket apart); draws are exactly
+        `sample_epochs` — a whole noise/epsilon frontier at one budget is
+        a single engine bucket."""
+        return self.sample_epochs(state, fleet, epochs, rng)
 
     def report_extras(self, state: StochasticState) -> Dict[str, float]:
         """The privacy/accuracy knob — and, when an accounting horizon is

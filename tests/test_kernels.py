@@ -126,6 +126,78 @@ def test_encode_fleet_matches_explicit_generator_oracle():
 
 
 # ---------------------------------------------------------------------------
+# encode: in-kernel threefry PRNG variant (no materialized generator)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,l", [(1, 1), (5, 9), (33, 7), (64, 48),
+                                 (128, 100)])
+@pytest.mark.parametrize("kind", ["normal", "bernoulli"])
+def test_prng_generator_bit_equals_host_prng(c, l, kind):
+    """The in-kernel tile generator replays the HOST PRNG exactly: the
+    oracle over all tiles is bit-identical to `generator_matrix` (odd
+    sizes exercise jax's zero-padded counter pairing)."""
+    from repro.core.encoding import generator_matrix
+
+    key = jax.random.PRNGKey(c * 100 + l)
+    want = generator_matrix(key, c, l, kind=kind)
+    got = en_ops.generator_values(key, c, l, kind=kind)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block", [(16, 16, 16), (32, 64, 16),
+                                   (128, 128, 128)])
+def test_encode_prng_matches_host_path(block):
+    """Fused in-kernel-generator encode == the host-PRNG kernel path fed
+    the materialized G (same bits, matmul-tiling rounding only)."""
+    key = jax.random.PRNGKey(11)
+    c, l, d = 60, 45, 33
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (l,))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (l, d))
+    from repro.core.encoding import generator_matrix
+    g = generator_matrix(key, c, l)
+    want = en_ops.reference(g, w, x)
+    got = en_ops.encode_parity_prng(key, w, x, c, block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.integers(1, 48), l=st.integers(1, 48), d=st.integers(1, 32))
+def test_encode_prng_property(c, l, d):
+    key = jax.random.PRNGKey(c * 10000 + l * 100 + d)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (l,))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (l, d))
+    from repro.core.encoding import generator_matrix
+    g = generator_matrix(key, c, l)
+    want = en_ops.reference(g, w, x)
+    got = en_ops.encode_parity_prng(key, w, x, c, block=(16, 16, 16))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("kind", ["normal", "bernoulli"])
+def test_encode_fleet_prng_matches_host_fleet(kind):
+    """The streamed in-kernel-PRNG fleet encoder equals the host fleet
+    encoder: the per-client `jax.random.split` layout is shared, so both
+    paths draw the same G_i."""
+    from repro.core import encoding
+
+    key = jax.random.PRNGKey(29)
+    n, ell, d, c = 4, 21, 10, 15
+    xs = jax.random.normal(key, (n, ell, d))
+    ys = jax.random.normal(jax.random.fold_in(key, 1), (n, ell))
+    ws = jax.random.uniform(jax.random.fold_in(key, 2), (n, ell),
+                            minval=0.2, maxval=1.0)
+    want_x, want_y = encoding.encode_fleet(key, xs, ys, ws, c, kind=kind)
+    got_x, got_y = en_ops.encode_fleet_prng(key, xs, ys, ws, c, kind=kind,
+                                            block=(16, 16, 16))
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x),
+                               rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=2e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
 # ssd: intra-chunk state-space dual kernel
 # ---------------------------------------------------------------------------
 

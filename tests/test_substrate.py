@@ -196,8 +196,8 @@ def test_min_return_prob_gates_scheduling_and_clips_weights():
     scheduled, and 1/p_i importance weights are clipped at the floor."""
     from repro.core.delay_model import DeviceDelayParams
     from repro.core.redundancy import RedundancyPlan
-    from repro.fed.trainer import FedState, presample_round_weights, \
-        round_weights
+    from repro.fed.trainer import (
+        FedState, presample_round_weights, round_weights)
 
     edge = DeviceDelayParams(a=np.array([1e-3, 1e-3]),
                              mu=np.array([100.0, 100.0]),
