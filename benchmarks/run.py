@@ -18,7 +18,8 @@ def main(argv=None) -> int:
                     help="reduced epoch counts (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig3,fig4,fig5,"
-                         "schemes,privacy,ablation,noniid,kernels,roofline")
+                         "schemes,privacy,ablation,noniid,serve,kernels,"
+                         "roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -54,6 +55,9 @@ def main(argv=None) -> int:
     if want("ablation"):
         from . import ablation_baselines
         ablation_baselines.main(epochs=600 if args.fast else 1000)
+    if want("serve"):
+        from . import perf_serve
+        perf_serve.main(epochs=240 if args.fast else 400)
     if want("kernels"):
         from . import kernels
         kernels.main()

@@ -19,6 +19,7 @@
 #   schemes-smoke  scheme sanity + plan budget  -> BENCH_schemes.json
 #   privacy-smoke  DP calibration + frontier    -> BENCH_privacy.json
 #   sweep-smoke    batched sweep engine >= 3x   -> BENCH_sweep.json
+#   serve-smoke    serving engine >= 2x sess/s  -> BENCH_serve.json
 #   perf-full      (--perf only) full session micro-benchmark
 #
 # The BENCH_*.json artifacts are machine-readable (timings + gate
@@ -85,6 +86,7 @@ if [[ "$TIER" != "fast" ]]; then
     run_stage schemes-smoke python -m benchmarks.fig_schemes --smoke
     run_stage privacy-smoke python -m benchmarks.fig_privacy --smoke
     run_stage sweep-smoke python -m benchmarks.perf_sweep --smoke
+    run_stage serve-smoke python -m benchmarks.perf_serve --smoke
 fi
 
 if [[ "$TIER" == "perf" ]]; then

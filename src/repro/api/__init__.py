@@ -8,13 +8,13 @@ epoch engine and returns a unified `TraceReport`.  `make_strategy(name,
 """
 from .registry import available_strategies, make_strategy, register_strategy
 from .report import TraceReport, coding_gain, convergence_time
-from .session import Session, plan_sweep, run_sweep
+from .session import Session, make_epoch_step, plan_sweep, run_sweep
 from .strategy import (CodedFL, EpochSchedule, GradientCodingFL, Strategy,
                        TrainData, UncodedFL)
 
 __all__ = [
     "TraceReport", "coding_gain", "convergence_time",
-    "Session", "plan_sweep", "run_sweep",
+    "Session", "plan_sweep", "run_sweep", "make_epoch_step",
     "Strategy", "TrainData", "EpochSchedule",
     "UncodedFL", "CodedFL", "GradientCodingFL",
     "make_strategy", "register_strategy", "available_strategies",

@@ -123,6 +123,32 @@ def _bucket_key(strategy: Strategy, state: Any, data: TrainData,
             _tree_shape_key(dev), _tree_shape_key(arrivals))
 
 
+def make_epoch_step(strategy: Strategy, state: Any, m: int) -> Callable:
+    """Build THE per-epoch training program for one strategy state.
+
+    Returns `step(beta, dev, lr, beta_true, arr_t) -> (beta', nmse')`:
+    one gradient round (`round_contributions`), one GD update (Eq. 3),
+    one NMSE probe — exactly the body of the classic epoch loop.
+
+    Every engine closes over this one function: the sweep engine's
+    `lax.scan` body below (solo `Session.run` included, as a size-1
+    sweep) and the serving engine's `lax.while_loop` body
+    (`repro.serving.fed_engine`).  Sharing the program — not hoping two
+    copies stay in sync — is what makes a served lane's trace
+    bit-for-bit prefix-equal to the same session's fixed-epoch solo run.
+    """
+    m_s = jnp.asarray(m, dtype=jnp.int32)
+
+    def step(beta: jax.Array, dev: Dict[str, jax.Array], lr: jax.Array,
+             beta_true: jax.Array,
+             arr_t: Dict[str, jax.Array]) -> tuple:
+        g = strategy.round_contributions(state, dev, beta, arr_t)
+        beta = aggregation.gd_update(beta, g, lr, m_s)
+        return beta, aggregation.nmse(beta, beta_true)
+
+    return step
+
+
 def _build_engine(strategy: Strategy, state: Any, data: TrainData,
                   shared: Dict[str, jax.Array], args: tuple) -> Callable:
     """Compile the batched engine for one shape bucket.
@@ -140,9 +166,10 @@ def _build_engine(strategy: Strategy, state: Any, data: TrainData,
     from repro.launch.mesh import make_lane_mesh
     from repro.launch.sharding import lane_specs
 
-    m, d, dtype = data.m, data.d, data.xs.dtype
+    d, dtype = data.d, data.xs.dtype
     n_lanes = jax.tree.leaves(args)[0].shape[0]
     mesh = make_lane_mesh(n_lanes)
+    epoch_step = make_epoch_step(strategy, state, data.m)
 
     def lanes(shared_op, *lane_args):
         beta_true = shared_op.pop("beta_true")
@@ -152,13 +179,10 @@ def _build_engine(strategy: Strategy, state: Any, data: TrainData,
             dev = {**shared_op, **dev_lane}
             # lr rides in as a per-lane scalar operand: identical
             # arithmetic to the legacy closed-over constant
-            m_s = jnp.asarray(m, dtype=jnp.int32)
             beta0 = jnp.zeros(d, dtype=dtype)
 
             def step(beta, arr_t):
-                g = strategy.round_contributions(state, dev, beta, arr_t)
-                beta = aggregation.gd_update(beta, g, lr, m_s)
-                return beta, aggregation.nmse(beta, beta_true)
+                return epoch_step(beta, dev, lr, beta_true, arr_t)
 
             _, trace = jax.lax.scan(step, beta0, arr)
             nmse0 = aggregation.nmse(beta0, beta_true)

@@ -181,7 +181,16 @@ class Strategy(Protocol):
     #     data)` call see the same data, so the sweep engine ships ONE
     #     replicated copy of these operands instead of stacking them B
     #     times.  Omitting the declaration is always safe (everything is
-    #     stacked per lane).
+    #     stacked per lane);
+    #   * serve_convergence(state, criterion) -> criterion — the serving
+    #     engine's convergence hook (`repro.serving.fed_engine`): given
+    #     the engine's per-lane `ConvergenceCriterion`, return a
+    #     (possibly tightened) criterion for this session.  The canonical
+    #     use is budget exhaustion: `StochasticCodedFL` caps
+    #     `max_epochs` at its DP accounting horizon so an
+    #     epsilon-budgeted lane exits when the budget is spent instead
+    #     of training past it.  Absent the hook, the engine's criterion
+    #     applies unchanged.
 
 
 # ---------------------------------------------------------------------------

@@ -308,6 +308,19 @@ class StochasticCodedFL:
         a single engine bucket."""
         return self.sample_epochs(state, fleet, epochs, rng)
 
+    def serve_convergence(self, state: StochasticState, criterion):
+        """Serving-engine hook (`repro.serving`): epsilon-budget
+        exhaustion.  With a calibrated (epsilon, delta) budget, every
+        round past the accounting horizon overspends the target, so the
+        served epoch budget is capped at `rounds` — the lane then frees
+        its slot when the budget is spent, and its truncated
+        `epsilon_schedule` lands on `TraceReport.extras`."""
+        if self.epsilon_target is None or self.rounds is None:
+            return criterion
+        cap = int(self.rounds) if criterion.max_epochs is None \
+            else min(int(criterion.max_epochs), int(self.rounds))
+        return dataclasses.replace(criterion, max_epochs=cap)
+
     def report_extras(self, state: StochasticState) -> Dict[str, float]:
         """The privacy/accuracy knob — and, when an accounting horizon is
         set, the composed (epsilon, delta) spend — on every TraceReport."""

@@ -1,3 +1,10 @@
 from .engine import Request, ServeEngine
+from .fed_engine import FedServeEngine
+from .scheduler import (ConvergenceCriterion, FifoScheduler, ServeRequest,
+                        poisson_arrivals)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "Request", "ServeEngine",
+    "FedServeEngine", "ServeRequest", "ConvergenceCriterion",
+    "FifoScheduler", "poisson_arrivals",
+]

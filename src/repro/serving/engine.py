@@ -85,8 +85,19 @@ class ServeEngine:
         self._prefill = jax.jit(_prefill)
 
     # ------------------------------------------------------------------
+    def fits(self, req: Request) -> bool:
+        """A request is servable iff its prompt prefills into the cache
+        with room to decode at least one token.  Oversized requests are
+        NEVER admissible — admitting one would overflow the cache, and
+        leaving one at the queue head would starve everything behind it
+        (see `run`)."""
+        return len(req.prompt) + 1 <= self.max_seq
+
     def try_admit(self, req: Request) -> bool:
-        """Prefill a request into a free slot; False if engine is full."""
+        """Prefill a request into a free slot; False if engine is full
+        or the request can never fit."""
+        if not self.fits(req):
+            return False
         free = [s for s in range(self.n_slots) if s not in self.active]
         if not free:
             return False
@@ -128,13 +139,21 @@ class ServeEngine:
 
     def run(self, requests: list[Request], max_steps: int = 10_000
             ) -> list[Request]:
-        """Drive a queue of requests to completion (continuous batching)."""
-        pending = list(requests)
+        """Drive a queue of requests to completion (continuous batching).
+
+        Admission scans the WHOLE pending queue each iteration, not just
+        its head: a request that cannot be admitted right now (engine
+        momentarily full, or oversized and never admissible) must not
+        starve admissible requests behind it.  Requests that can never
+        fit are rejected up front and are not returned as done.
+        """
+        pending = [r for r in requests if self.fits(r)]
         done: list[Request] = []
         steps = 0
         while (pending or self.active) and steps < max_steps:
-            while pending and self.try_admit(pending[0]):
-                pending.pop(0)
+            pending = [r for r in pending if not self.try_admit(r)]
+            if not self.active:
+                break  # nothing running and nothing admissible: idle-exit
             done.extend(self.step())
             steps += 1
         return done

@@ -1,0 +1,298 @@
+"""Tests for the always-on serving engine (`repro.serving.FedServeEngine`).
+
+The load-bearing guarantee extends the sweep engine's: a served lane is
+the SAME computation as a solo `Session.run` truncated at the reported
+exit epoch — same planning, same identity-keyed randomness, and a
+while-loop body built from the same `make_epoch_step` program the scan
+engine traces.  Every trace comparison here is exact
+(`assert_array_equal`), never approximate, and admission order must be
+unobservable in any per-session result.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Session, TrainData, make_strategy
+from repro.serving import (ConvergenceCriterion, FedServeEngine,
+                           poisson_arrivals)
+from repro.sim.network import paper_fleet, wireless_fleet
+
+EPOCHS = 25
+LR = 0.05
+STRATEGIES = ["uncoded", "cfl", "gradcode", "stochastic", "lowlatency"]
+
+
+@pytest.fixture(scope="module")
+def small():
+    fleet = paper_fleet(0.2, 0.2, seed=1, n=12, d=40)
+    wfleet = wireless_fleet(0.2, 0.2, nu_erasure=0.3, seed=0, n=12, d=40)
+    data = TrainData.linreg(jax.random.PRNGKey(0), n=12, ell=60, d=40)
+    return fleet, wfleet, data
+
+
+def _sessions_for(name: str, small, epochs: int = EPOCHS):
+    """Per-strategy serve workloads; distinct per-session seeds so
+    arrival-order tests can tell the sessions apart."""
+    fleet, wfleet, data = small
+    c = int(0.3 * data.m)
+    if name == "uncoded":
+        return [Session(strategy=make_strategy("uncoded"), fleet=fleet,
+                        lr=lr, epochs=epochs, seed=10 + i)
+                for i, lr in enumerate((0.05, 0.03))]
+    if name == "cfl":
+        return [Session(strategy=make_strategy("cfl", key_seed=seed,
+                                               fixed_c=c),
+                        fleet=fleet, lr=LR, epochs=epochs, seed=20 + seed)
+                for seed in (7, 8, 9)]
+    if name == "gradcode":
+        return [Session(strategy=make_strategy("gradcode", r=3),
+                        fleet=fleet, lr=lr, epochs=epochs, seed=30 + i)
+                for i, lr in enumerate((0.05, 0.04))]
+    if name == "stochastic":
+        return [Session(strategy=make_strategy(
+            "stochastic", key_seed=7, fixed_c=c, noise_multiplier=sigma,
+            sample_frac=0.8, rounds=epochs),
+            fleet=wfleet, lr=LR, epochs=epochs, seed=40 + i)
+            for i, sigma in enumerate((0.0, 0.5))]
+    if name == "lowlatency":
+        return [Session(strategy=make_strategy(
+            "lowlatency", key_seed=seed, fixed_c=c, chunks=4),
+            fleet=wfleet, lr=LR, epochs=epochs, seed=50 + seed)
+            for seed in (7, 11)]
+    raise ValueError(name)
+
+
+def _assert_prefix_of_solo(report, session, data):
+    """Bit-for-bit: the served trace is the solo trace truncated at the
+    reported exit epoch, with the exit point on extras."""
+    solo = session.run(data, rng=np.random.default_rng(session.seed))
+    t = report.extras["serve_exit_epoch"]
+    assert 0 <= t <= session.epochs
+    assert report.nmse.shape == (t + 1,)
+    np.testing.assert_array_equal(report.nmse, solo.nmse[:t + 1])
+    np.testing.assert_array_equal(report.times, solo.times[:t + 1])
+    np.testing.assert_array_equal(report.epoch_durations,
+                                  solo.epoch_durations[:t])
+    assert report.label == solo.label
+    assert report.setup_time == solo.setup_time
+    return solo, t
+
+
+# ---------------------------------------------------------------------------
+# full-budget serving == solo runs, all five registered strategies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_serve_full_budget_equals_solo(small, name):
+    """With the default (disabled) criterion a served session runs its
+    whole fixed epoch count and reproduces the solo report exactly —
+    trace, clock, uplink pricing, and every strategy extra."""
+    _, _, data = small
+    sessions = _sessions_for(name, small)
+    engine = FedServeEngine(data, lane_width=2, chunk=10)
+    reports = engine.serve(sessions)
+    for sess, rep in zip(sessions, reports):
+        solo, t = _assert_prefix_of_solo(rep, sess, data)
+        assert t == sess.epochs
+        assert rep.extras["serve_converged"] is False
+        assert rep.uplink_bits_total == solo.uplink_bits_total
+        for k, v in solo.extras.items():
+            np.testing.assert_array_equal(np.asarray(rep.extras[k]),
+                                          np.asarray(v))
+        assert set(rep.extras) - set(solo.extras) == {
+            "serve_exit_epoch", "serve_converged", "serve_uid"}
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_serve_early_exit_prefix_parity(small, name):
+    """An NMSE-target early exit stops the lane at the FIRST epoch the
+    solo trace crosses the target, and the served trace is bit-for-bit
+    that solo prefix."""
+    _, _, data = small
+    target = 0.35
+    sessions = _sessions_for(name, small)
+    engine = FedServeEngine(
+        data, lane_width=2, chunk=7,
+        criterion=ConvergenceCriterion(nmse_target=target))
+    reports = engine.serve(sessions)
+    assert any(r.extras["serve_exit_epoch"] < s.epochs
+               for r, s in zip(reports, sessions))
+    for sess, rep in zip(sessions, reports):
+        solo, t = _assert_prefix_of_solo(rep, sess, data)
+        if rep.extras["serve_converged"]:
+            hit = np.nonzero(solo.nmse[1:] <= target)[0]
+            assert hit.size and int(hit[0]) + 1 == t
+        else:
+            assert t == sess.epochs
+            assert not np.any(solo.nmse[1:] <= target)
+
+
+def test_relative_plateau_exit(small):
+    """The rel_delta clause fires when one epoch moves NMSE by less than
+    the relative threshold; min_epochs holds it off before that."""
+    fleet, _, data = small
+    sess = Session(strategy=make_strategy("uncoded"), fleet=fleet,
+                   lr=0.01, epochs=60, seed=3)
+    engine = FedServeEngine(
+        data, lane_width=2, chunk=16,
+        criterion=ConvergenceCriterion(rel_delta=5e-2, min_epochs=5))
+    [rep] = engine.serve([sess])
+    solo, t = _assert_prefix_of_solo(rep, sess, data)
+    assert rep.extras["serve_converged"] and 5 <= t < sess.epochs
+    rel = np.abs(np.diff(solo.nmse)) / solo.nmse[:-1]
+    assert rel[t - 1] <= 5e-2  # the epoch that tripped it
+    assert not np.any(rel[4:t - 1] <= 5e-2)  # and none eligible before
+
+
+# ---------------------------------------------------------------------------
+# admission-order independence
+# ---------------------------------------------------------------------------
+
+def test_arrival_order_independent_traces(small):
+    """Permuting the arrival interleaving of a mixed workload must leave
+    every per-session report bit-identical: randomness is keyed on each
+    session's stable identity, never on admission order."""
+    fleet, wfleet, data = small
+    c1, c2 = int(0.2 * data.m), int(0.4 * data.m)
+    sessions = [
+        Session(strategy=make_strategy("uncoded"), fleet=fleet, lr=LR,
+                epochs=EPOCHS, seed=60),
+        Session(strategy=make_strategy("cfl", key_seed=7, fixed_c=c1),
+                fleet=fleet, lr=LR, epochs=EPOCHS, seed=61),
+        Session(strategy=make_strategy("cfl", key_seed=7, fixed_c=c2),
+                fleet=fleet, lr=LR, epochs=EPOCHS, seed=62),
+        Session(strategy=make_strategy("lowlatency", key_seed=7, fixed_c=c1,
+                                       chunks=4),
+                fleet=wfleet, lr=LR, epochs=EPOCHS, seed=63),
+    ]
+    arrivals = [0.0, 1.0, 2.0, 3.0]
+
+    def run(order):
+        engine = FedServeEngine(data, lane_width=2, chunk=9)
+        uids = engine.submit_many([sessions[i] for i in order],
+                                  arrivals=[arrivals[i] for i in order])
+        engine.drain()
+        reports = [engine._done[u] for u in uids]
+        return {order[k]: reports[k] for k in range(len(order))}
+
+    base = run([0, 1, 2, 3])
+    perm = run([3, 0, 2, 1])
+    for i in range(len(sessions)):
+        np.testing.assert_array_equal(base[i].nmse, perm[i].nmse)
+        np.testing.assert_array_equal(base[i].epoch_durations,
+                                      perm[i].epoch_durations)
+        assert base[i].extras["serve_exit_epoch"] == \
+            perm[i].extras["serve_exit_epoch"]
+        _assert_prefix_of_solo(base[i], sessions[i], data)
+
+
+# ---------------------------------------------------------------------------
+# slot churn: converged lanes free capacity for the queue
+# ---------------------------------------------------------------------------
+
+def test_churn_more_sessions_than_slots(small):
+    """Six same-bucket sessions through two lane slots: every session
+    completes with solo parity in ONE group, finished lanes being
+    swapped out for pending arrivals."""
+    fleet, _, data = small
+    c = int(0.3 * data.m)
+    sessions = [Session(strategy=make_strategy("cfl", key_seed=7, fixed_c=c),
+                        fleet=fleet, lr=LR, epochs=EPOCHS, seed=70 + i)
+                for i in range(6)]
+    arrivals = poisson_arrivals(6, 0.5, np.random.default_rng(0))
+    engine = FedServeEngine(
+        data, lane_width=2, chunk=6,
+        criterion=ConvergenceCriterion(nmse_target=0.35))
+    reports = engine.serve(sessions, arrivals=list(arrivals))
+    assert len(reports) == 6 and engine.n_groups == 1
+    assert engine.n_active == 0 and engine.n_pending == 0
+    for sess, rep in zip(sessions, reports):
+        _assert_prefix_of_solo(rep, sess, data)
+        assert rep.extras["serve_converged"]
+
+
+# ---------------------------------------------------------------------------
+# epsilon-budget exhaustion + schedule truncation (StochasticCodedFL)
+# ---------------------------------------------------------------------------
+
+def test_epsilon_budget_exhaustion_caps_epochs(small):
+    """A DP-budgeted stochastic session stops at its accounting horizon:
+    `serve_convergence` caps the epoch budget at `rounds`, and the run is
+    a solo prefix of exactly that length."""
+    _, wfleet, data = small
+    c = int(0.3 * data.m)
+    rounds = 10
+    sess = Session(strategy=make_strategy(
+        "stochastic", key_seed=7, fixed_c=c, epsilon_target=5.0,
+        delta=1e-5, sample_frac=0.8, rounds=rounds),
+        fleet=wfleet, lr=LR, epochs=EPOCHS, seed=80)
+    engine = FedServeEngine(data, lane_width=2, chunk=8)
+    [rep] = engine.serve([sess])
+    _, t = _assert_prefix_of_solo(rep, sess, data)
+    assert t == rounds
+    assert rep.extras["serve_converged"] is False  # budget, not convergence
+    assert rep.extras["accounting_rounds"] == rounds
+    assert len(rep.extras["epsilon_schedule"]) == rounds
+
+
+def test_epsilon_schedule_truncated_on_early_exit(small):
+    """When convergence beats the accounting horizon, the reported
+    cumulative epsilon schedule (and the spend) truncate to the epochs
+    actually served."""
+    _, wfleet, data = small
+    c = int(0.3 * data.m)
+    sess = Session(strategy=make_strategy(
+        "stochastic", key_seed=7, fixed_c=c, noise_multiplier=0.5,
+        sample_frac=0.8, rounds=EPOCHS),
+        fleet=wfleet, lr=LR, epochs=EPOCHS, seed=81)
+    engine = FedServeEngine(
+        data, lane_width=2, chunk=8,
+        criterion=ConvergenceCriterion(nmse_target=0.5))
+    [rep] = engine.serve([sess])
+    solo, t = _assert_prefix_of_solo(rep, sess, data)
+    assert rep.extras["serve_converged"] and 0 < t < EPOCHS
+    full = np.asarray(solo.extras["epsilon_schedule"])
+    cut = np.asarray(rep.extras["epsilon_schedule"])
+    assert cut.shape == (t,)
+    np.testing.assert_array_equal(cut, full[:t])
+    assert rep.extras["epsilon_spent"] == float(full[t - 1])
+    assert rep.extras["accounting_rounds"] == t
+    assert rep.privacy_budget() is not None
+
+
+# ---------------------------------------------------------------------------
+# scheduler/criterion unit behavior
+# ---------------------------------------------------------------------------
+
+def test_criterion_validation():
+    with pytest.raises(ValueError, match="min_epochs"):
+        ConvergenceCriterion(min_epochs=0)
+    with pytest.raises(ValueError, match="max_epochs"):
+        ConvergenceCriterion(max_epochs=-1)
+    assert ConvergenceCriterion(max_epochs=10).budget(25) == 10
+    assert ConvergenceCriterion().budget(25) == 25
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(4, 0.0, np.random.default_rng(0))
+
+
+def test_duplicate_uid_rejected(small):
+    fleet, _, data = small
+    sess = Session(strategy=make_strategy("uncoded"), fleet=fleet, lr=LR,
+                   epochs=5, seed=0)
+    engine = FedServeEngine(data, lane_width=2, chunk=4)
+    engine.submit(sess, uid=5)
+    with pytest.raises(ValueError, match="duplicate"):
+        engine.submit(sess, uid=5)
+
+
+def test_serve_engine_programs_are_cached(small):
+    """Two engines over the same workload shape share compiled programs
+    through the process-wide engine cache."""
+    from repro.api.session import _ENGINE_CACHE
+    fleet, _, data = small
+    sess = Session(strategy=make_strategy("uncoded"), fleet=fleet, lr=LR,
+                   epochs=EPOCHS, seed=90)
+    FedServeEngine(data, lane_width=2, chunk=10).serve([sess])
+    before = len(_ENGINE_CACHE)
+    FedServeEngine(data, lane_width=2, chunk=10).serve([sess])
+    assert len(_ENGINE_CACHE) == before

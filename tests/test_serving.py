@@ -80,6 +80,41 @@ def test_interleaved_slots_are_isolated(setup):
     assert by_uid[2] == solo2
 
 
+def test_oversized_head_does_not_starve_queue(setup):
+    """Head-of-line regression: a request whose prompt can never fit in
+    the cache must be rejected — not admitted (cache overflow) and not
+    left blocking the queue head while admissible requests starve."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    big = Request(uid=0, prompt=rng.integers(0, cfg.vocab,
+                                             64).astype(np.int32),
+                  max_new_tokens=4)
+    ok = [Request(uid=i, prompt=rng.integers(0, cfg.vocab,
+                                             8).astype(np.int32),
+                  max_new_tokens=4) for i in (1, 2)]
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=32)
+    assert not eng.fits(big) and all(eng.fits(r) for r in ok)
+    assert not eng.try_admit(big)
+    done = eng.run([big] + ok, max_steps=200)
+    assert sorted(r.uid for r in done) == [1, 2]  # big rejected, rest served
+    assert big.out_tokens == [] and big.slot is None
+    for r in done:
+        assert len(r.out_tokens) == 4
+
+
+def test_run_admits_past_momentarily_blocked_head(setup):
+    """With one slot busy, admission must keep scanning the queue rather
+    than spin on the head: every queued request still completes."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab,
+                                               6 + 2 * i).astype(np.int32),
+                    max_new_tokens=3) for i in range(4)]
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=32)
+    done = eng.run(reqs, max_steps=200)
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+
+
 def test_ssm_engine(setup):
     cfg = get_config("mamba2-1.3b").reduced()
     params = T.init_params(cfg, jax.random.PRNGKey(1))
