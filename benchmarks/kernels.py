@@ -1,8 +1,24 @@
 """Kernel microbenchmarks: jit'd wall time of the Pallas kernels (interpret
 mode on CPU — correctness-representative, not TPU-representative) vs the
-pure-jnp reference path at the paper's §IV shapes."""
+pure-jnp reference path at the paper's §IV shapes, PLUS the tuned-vs-default
+tile sweep at fleet-scale shapes.
+
+The fleet sweep is the autotuner's proof of work: for each fleet-scale
+shape it times the hard-coded default tile against `block="auto"` (the
+persisted `repro.tune` cache, committed for CI shapes in
+`src/repro/tune/defaults.json`) across `encode_parity`, the in-kernel
+PRNG encoder, and `lsq_gradient`.  `--smoke` gates the best encode
+speedup at >= $KERNELS_SMOKE_MIN_SPEEDUP (default 1.2) and writes
+BENCH_kernels.json via `common.dump_bench` for the perf-trend stage.
+
+    python -m benchmarks.kernels [--smoke]
+    python -m benchmarks.run --only kernels
+"""
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
 
 import jax
@@ -10,12 +26,17 @@ import jax
 from repro.kernels.coded_grad import ops as cg_ops
 from repro.kernels.encode import ops as en_ops
 
-from .common import emit
+from .common import dump_bench, emit
+
+# (c, ell, d) composite-parity shapes at fleet scale: what the streamed
+# encoder sees when n is 1e5+ and the parity budget c grows with it.
+FLEET_ENCODE_SHAPES = [(2048, 512, 512)]
+FLEET_GRAD_SHAPES = [(8192, 512)]
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    out = fn(*args)
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -23,25 +44,27 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main() -> None:
+def _paper_shapes(iters: int) -> None:
     key = jax.random.PRNGKey(0)
     # paper shapes: composite parity c=936, d=500 (delta=0.13)
     c, d, ell = 936, 500, 300
     a = jax.random.normal(key, (c, d))
     y = jax.random.normal(jax.random.fold_in(key, 1), (c,))
     beta = jax.random.normal(jax.random.fold_in(key, 2), (d,))
-    us_ref = _time(jax.jit(cg_ops.reference), a, y, beta)
+    us_ref = _time(jax.jit(cg_ops.reference), a, y, beta, iters=iters)
     emit("kernels/coded_grad_ref_jnp", us_ref, f"shape={c}x{d}")
-    us_k = _time(lambda *args: cg_ops.lsq_gradient(*args), a, y, beta)
+    us_k = _time(lambda *args: cg_ops.lsq_gradient(*args), a, y, beta,
+                 iters=iters)
     emit("kernels/coded_grad_pallas_interpret", us_k,
          "interpret=True (CPU validation mode; perf target is TPU)")
 
     g = jax.random.normal(key, (c, ell))
     w = jax.random.uniform(jax.random.fold_in(key, 3), (ell,))
     x = jax.random.normal(jax.random.fold_in(key, 4), (ell, d))
-    us_ref = _time(jax.jit(en_ops.reference), g, w, x)
+    us_ref = _time(jax.jit(en_ops.reference), g, w, x, iters=iters)
     emit("kernels/encode_ref_jnp", us_ref, f"shape={c}x{ell}x{d}")
-    us_k = _time(lambda *args: en_ops.encode_parity(*args), g, w, x)
+    us_k = _time(lambda *args: en_ops.encode_parity(*args), g, w, x,
+                 iters=iters)
     emit("kernels/encode_pallas_interpret", us_k,
          "interpret=True (CPU validation mode; perf target is TPU)")
 
@@ -49,13 +72,101 @@ def main() -> None:
     q = jax.random.normal(key, (1, 4, 256, 64))
     kk = jax.random.normal(jax.random.fold_in(key, 5), (1, 4, 256, 64))
     vv = jax.random.normal(jax.random.fold_in(key, 6), (1, 4, 256, 64))
-    us_ref = _time(jax.jit(fa_ops.reference), q, kk, vv)
+    us_ref = _time(jax.jit(fa_ops.reference), q, kk, vv, iters=iters)
     emit("kernels/flash_attn_ref_jnp", us_ref, "shape=B1xH4xS256xD64")
     us_k = _time(lambda *a: fa_ops.causal_attention(*a, block_q=64,
-                                                    block_k=64), q, kk, vv)
+                                                    block_k=64), q, kk, vv,
+                 iters=iters)
     emit("kernels/flash_attn_pallas_interpret", us_k,
          "interpret=True (CPU validation mode; perf target is TPU)")
 
 
+def _fleet_sweep(iters: int) -> dict:
+    """Tuned (block="auto") vs hard-coded default tiles at fleet scale.
+
+    Returns the per-(kernel, shape) speedups; the best encode speedup is
+    the smoke gate."""
+    from repro.kernels.coded_grad.coded_grad import DEFAULT_BLOCK_M
+    from repro.kernels.encode.encode import DEFAULT_BLOCK
+    from repro.tune.cache import lookup_block
+
+    key = jax.random.PRNGKey(7)
+    speedups: dict[str, float] = {}
+
+    for c, ell, d in FLEET_ENCODE_SHAPES:
+        tag = f"{c}x{ell}x{d}"
+        g = jax.random.normal(key, (c, ell))
+        w = jax.random.uniform(jax.random.fold_in(key, 1), (ell,))
+        x = jax.random.normal(jax.random.fold_in(key, 2), (ell, d))
+
+        us_def = _time(lambda *a: en_ops.encode_parity(
+            *a, block=DEFAULT_BLOCK), g, w, x, iters=iters)
+        emit(f"kernels/encode_default_{tag}", us_def,
+             f"block={DEFAULT_BLOCK}")
+        tuned = lookup_block("encode", (c, ell, d))
+        us_auto = _time(lambda *a: en_ops.encode_parity(
+            *a, block="auto"), g, w, x, iters=iters)
+        emit(f"kernels/encode_auto_{tag}", us_auto,
+             f"block=auto -> {tuned or 'MISS (default)'}")
+        speedups[f"encode_tuned_speedup_x_{tag}"] = us_def / us_auto
+
+        pk = jax.random.PRNGKey(11)
+        us_def = _time(lambda *a: en_ops.encode_parity_prng(
+            *a, c, block=DEFAULT_BLOCK), pk, w, x, iters=iters)
+        emit(f"kernels/encode_prng_default_{tag}", us_def,
+             f"block={DEFAULT_BLOCK}")
+        tuned = lookup_block("encode_prng", (c, ell, d))
+        us_auto = _time(lambda *a: en_ops.encode_parity_prng(
+            *a, c, block="auto"), pk, w, x, iters=iters)
+        emit(f"kernels/encode_prng_auto_{tag}", us_auto,
+             f"block=auto -> {tuned or 'MISS (default)'}")
+        speedups[f"encode_prng_tuned_speedup_x_{tag}"] = us_def / us_auto
+
+    for m, d in FLEET_GRAD_SHAPES:
+        tag = f"{m}x{d}"
+        a = jax.random.normal(key, (m, d))
+        y = jax.random.normal(jax.random.fold_in(key, 3), (m,))
+        beta = jax.random.normal(jax.random.fold_in(key, 4), (d,))
+        us_def = _time(lambda *args: cg_ops.lsq_gradient(
+            *args, block_m=DEFAULT_BLOCK_M), a, y, beta, iters=iters)
+        emit(f"kernels/coded_grad_default_{tag}", us_def,
+             f"block_m={DEFAULT_BLOCK_M}")
+        tuned = lookup_block("coded_grad", (m, d))
+        us_auto = _time(lambda *args: cg_ops.lsq_gradient(
+            *args, block_m="auto"), a, y, beta, iters=iters)
+        emit(f"kernels/coded_grad_auto_{tag}", us_auto,
+             f"block_m=auto -> {tuned or 'MISS (default)'}")
+        speedups[f"coded_grad_tuned_speedup_x_{tag}"] = us_def / us_auto
+
+    return speedups
+
+
+def main(smoke: bool = False) -> None:
+    iters = 2 if smoke else 5
+    gates: dict = {}
+    try:
+        _paper_shapes(iters)
+        speedups = _fleet_sweep(iters)
+        gates.update({k: round(v, 2) for k, v in speedups.items()})
+        best_encode = max(v for k, v in speedups.items()
+                          if k.startswith("encode"))
+        gates["best_encode_tuned_speedup_x"] = round(best_encode, 2)
+    finally:
+        # artifact BEFORE the gate assert: a regression still records
+        dump_bench("kernels", gates)
+    if smoke:
+        floor = float(os.environ.get("KERNELS_SMOKE_MIN_SPEEDUP", "1.2"))
+        assert best_encode >= floor, (
+            f"tuned encode tiles beat defaults only {best_encode:.2f}x "
+            f"(< {floor}x) — stale src/repro/tune/defaults.json or a "
+            f"kernel/tuner regression")
+        print(f"kernels smoke OK: tuned encode {best_encode:.2f}x "
+              f">= {floor}x over default tiles")
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: fewer iters + tuned-tile speedup gate")
+    args = ap.parse_args()
+    sys.exit(main(smoke=args.smoke))

@@ -1,0 +1,174 @@
+"""Perf-trajectory gate: compare this run's BENCH_*.json against the
+previous run's artifacts and FAIL LOUDLY on regression.
+
+Closes the loop the artifacts were built for: every smoke stage records
+its timings and gate values machine-readably (`common.dump_bench`), the
+CI workflow downloads the previous successful run's artifacts into
+$PERF_BASELINE_DIR, and this module diffs every metric with a tolerance
+band — so a perf regression fails the build instead of drifting
+silently across PRs.
+
+Metric direction is classified from the name:
+
+  * lower-is-better:  *_us / us_per_call, *_s, *time*, *latency*,
+                      *nmse*, *bytes*, *budget*
+  * higher-is-better: *speedup*, *ratio*, *_x, *per_sec*, *throughput*
+  * unknown names are reported but never gated.
+
+Tolerances are env-tunable so flaky CPU runners widen the band without
+code edits:
+
+  * PERF_TREND_TOL       relative band for timing records (default 0.60:
+                         a timing must worsen >60% to fail — shared CI
+                         runners are noisy)
+  * PERF_TREND_GATE_TOL  band for gate values (default 0.25 — gate
+                         values are ratios/budgets, far more stable)
+  * PERF_TREND_SKIP      comma-separated fnmatch globs of metric names
+                         to exclude (e.g. 'kernels/flash*,*ref_jnp')
+
+Usage:
+    python -m benchmarks.perf_trend --baseline-dir perf_baseline [--new-dir .]
+
+Pure stdlib — importable without jax (tests exercise it directly).
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import glob
+import json
+import os
+import sys
+
+LOWER_BETTER = ("_us", "us_per_call", "_s", "time", "latency", "nmse",
+                "bytes", "budget")
+HIGHER_BETTER = ("speedup", "ratio", "_x", "per_sec", "throughput",
+                 "sessions_per", "epochs_per")
+
+
+def classify(name: str) -> str | None:
+    """'lower' | 'higher' | None (ungated) from the metric name."""
+    low = name.lower()
+    if any(pat in low for pat in HIGHER_BETTER):
+        return "higher"
+    if any(pat in low for pat in LOWER_BETTER):
+        return "lower"
+    return None
+
+
+def load_bench_dir(path: str) -> dict[str, dict]:
+    """{benchmark name: payload} for every BENCH_*.json under `path`
+    (recursive — artifact downloads nest files in per-run subdirs)."""
+    out: dict[str, dict] = {}
+    for f in sorted(glob.glob(os.path.join(path, "**", "BENCH_*.json"),
+                              recursive=True)):
+        try:
+            with open(f) as fh:
+                payload = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            continue
+        name = payload.get("benchmark") or \
+            os.path.basename(f)[len("BENCH_"):-len(".json")]
+        out[name] = payload
+    return out
+
+
+def _metrics(payload: dict) -> dict[str, float]:
+    """Flatten one BENCH payload to {metric name: value}."""
+    out: dict[str, float] = {}
+    for rec in payload.get("records", []):
+        name, val = rec.get("name"), rec.get("us_per_call")
+        if name is not None and isinstance(val, (int, float)):
+            out[f"{name}.us_per_call"] = float(val)
+    for key, val in (payload.get("gates") or {}).items():
+        if isinstance(val, (int, float)) and not isinstance(val, bool):
+            out[f"gates.{key}"] = float(val)
+    return out
+
+
+def compare(baseline: dict[str, dict], new: dict[str, dict],
+            tol: float, gate_tol: float,
+            skip: tuple[str, ...] = ()) -> dict:
+    """Diff every shared metric; returns {regressions, checked, notes}."""
+    regressions: list[str] = []
+    notes: list[str] = []
+    checked = 0
+    for bench, base_payload in sorted(baseline.items()):
+        if bench not in new:
+            notes.append(f"NOTE: baseline benchmark '{bench}' missing "
+                         f"from the new run (renamed or removed stage?)")
+            continue
+        base_m = _metrics(base_payload)
+        new_m = _metrics(new[bench])
+        for name, old in sorted(base_m.items()):
+            full = f"{bench}:{name}"
+            if any(fnmatch.fnmatch(full, pat) or
+                   fnmatch.fnmatch(name, pat) for pat in skip):
+                continue
+            if name not in new_m:
+                notes.append(f"NOTE: {full} missing from the new run")
+                continue
+            cur = new_m[name]
+            kind = classify(name)
+            band = gate_tol if name.startswith("gates.") else tol
+            delta = (cur - old) / abs(old) if old else 0.0
+            checked += 1
+            line = f"{full}: {old:.4g} -> {cur:.4g} ({delta:+.1%})"
+            if kind == "lower" and old > 0 and cur > old * (1.0 + band):
+                regressions.append(f"REGRESSION {line} [band +{band:.0%}]")
+            elif kind == "higher" and old > 0 and cur < old * (1.0 - band):
+                regressions.append(f"REGRESSION {line} [band -{band:.0%}]")
+            elif kind is None:
+                notes.append(f"ungated: {line}")
+    return {"regressions": regressions, "checked": checked,
+            "notes": notes}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.perf_trend")
+    ap.add_argument("--baseline-dir", required=True,
+                    help="previous run's BENCH_*.json artifacts")
+    ap.add_argument("--new-dir", default=os.environ.get("BENCH_DIR", "."),
+                    help="this run's BENCH_*.json (default $BENCH_DIR/.)")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("PERF_TREND_TOL", "0.60")))
+    ap.add_argument("--gate-tol", type=float,
+                    default=float(os.environ.get("PERF_TREND_GATE_TOL",
+                                                 "0.25")))
+    args = ap.parse_args(argv)
+    skip = tuple(p.strip() for p in
+                 os.environ.get("PERF_TREND_SKIP", "").split(",")
+                 if p.strip())
+
+    baseline = load_bench_dir(args.baseline_dir)
+    new = load_bench_dir(args.new_dir)
+    if not baseline:
+        print(f"perf-trend: no baseline artifacts under "
+              f"{args.baseline_dir!r} — nothing to compare")
+        return 0
+    if not new:
+        print(f"perf-trend: no new BENCH_*.json under {args.new_dir!r} — "
+              f"run the smoke stages first")
+        return 1
+
+    result = compare(baseline, new, args.tol, args.gate_tol, skip)
+    for note in result["notes"]:
+        print(note)
+    print(f"perf-trend: {result['checked']} metrics compared "
+          f"(timing band +{args.tol:.0%}, gate band {args.gate_tol:.0%}, "
+          f"{len(baseline)} baseline benchmarks)")
+    if result["regressions"]:
+        print(f"\nPERF TREND FAILED — {len(result['regressions'])} "
+              f"regression(s) vs the previous run:", file=sys.stderr)
+        for line in result["regressions"]:
+            print(f"  {line}", file=sys.stderr)
+        print("\n(widen the band via PERF_TREND_TOL / PERF_TREND_GATE_TOL"
+              " or exclude a metric via PERF_TREND_SKIP if this is"
+              " runner noise)", file=sys.stderr)
+        return 1
+    print("perf-trend OK: no regressions beyond the tolerance band")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

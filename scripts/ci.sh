@@ -20,11 +20,20 @@
 #   privacy-smoke  DP calibration + frontier    -> BENCH_privacy.json
 #   sweep-smoke    batched sweep engine >= 3x   -> BENCH_sweep.json
 #   serve-smoke    serving engine >= 2x sess/s  -> BENCH_serve.json
+#   kernels-smoke  tuned tiles >= 1.2x default  -> BENCH_kernels.json
+#                  (block="auto" vs hard-coded tiles at fleet scale;
+#                  floor tunable via KERNELS_SMOKE_MIN_SPEEDUP)
+#   perf-trend     compares every BENCH_*.json metric against the
+#                  previous run's artifacts in $PERF_BASELINE_DIR
+#                  (downloaded by ci.yml; SKIPPED with a notice when
+#                  absent — e.g. first run or local dev box).  Bands:
+#                  PERF_TREND_TOL / PERF_TREND_GATE_TOL / PERF_TREND_SKIP.
 #   perf-full      (--perf only) full session micro-benchmark
 #
 # The BENCH_*.json artifacts are machine-readable (timings + gate
-# values); .github/workflows/ci.yml uploads them so the perf trajectory
-# is tracked across PRs.
+# values); .github/workflows/ci.yml uploads them AND feeds the previous
+# run's copies back in, so the perf trajectory is a hard gate across
+# PRs, not just a tracked artifact.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -77,6 +86,18 @@ lint() {
     ruff format --check .
 }
 
+perf_trend() {
+    local dir="${PERF_BASELINE_DIR:-}"
+    if [[ -z "$dir" || ! -d "$dir" ]] || \
+            [[ -z "$(find "$dir" -name 'BENCH_*.json' -print -quit)" ]]
+    then
+        echo "SKIP: no baseline artifacts (PERF_BASELINE_DIR='${dir}');" \
+             "first run or local dev box"
+        return 0
+    fi
+    python -m benchmarks.perf_trend --baseline-dir "$dir" --new-dir .
+}
+
 run_stage lint lint
 run_stage tests python -m pytest -x -q
 
@@ -87,6 +108,8 @@ if [[ "$TIER" != "fast" ]]; then
     run_stage privacy-smoke python -m benchmarks.fig_privacy --smoke
     run_stage sweep-smoke python -m benchmarks.perf_sweep --smoke
     run_stage serve-smoke python -m benchmarks.perf_serve --smoke
+    run_stage kernels-smoke python -m benchmarks.kernels --smoke
+    run_stage perf-trend perf_trend
 fi
 
 if [[ "$TIER" == "perf" ]]; then

@@ -42,6 +42,7 @@ def parity_gradient(x_par: jax.Array, y_par: jax.Array, beta: jax.Array,
     c = x_par.shape[0]
     if use_kernel:
         from repro.kernels.coded_grad import ops as cg_ops
+        # block_m="auto" default: row tile from the repro.tune cache
         g = cg_ops.lsq_gradient(x_par, y_par, beta)
     else:
         # (resid @ X) == (X.T @ resid) but contracts the leading (row-major

@@ -17,6 +17,11 @@ fuses generator sampling + diagonal scaling + matmul accumulation end-to-end,
 streamed one client at a time.  This module is the pure-JAX reference path
 used by default on CPU; its fleet encoder streams clients through a
 `lax.scan` accumulation so the (n, c, d) parity stack never materializes.
+
+The `use_kernel` branches call the kernel ops at their `block="auto"`
+default, so tiles come from the persisted autotuner cache
+(`repro.tune`) — every consumer (CFL setup, the scheme strategies, the
+sweep and serving engines) inherits tuned tiles with zero plumbing.
 """
 from __future__ import annotations
 

@@ -3,25 +3,30 @@
 On CPU (no TPU backend) the kernel body runs in interpret mode — same
 lowering, Python-evaluated — so correctness is validated everywhere while
 the BlockSpec tiling targets TPU VMEM.
+
+`block_m="auto"` (the default) resolves the row-tile host-side against
+the persisted tuning cache (family "coded_grad", shape bucket of
+`(m, d)`, backend); a cold miss falls back to `DEFAULT_BLOCK_M`
+bit-for-bit.  Resolution never autotunes — see `python -m repro.tune`.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.kernels.common import on_tpu, resolve_block
+
 from . import coded_grad as _k
 from . import ref as _ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def lsq_gradient(a: jax.Array, y: jax.Array, beta: jax.Array,
-                 block_m: int = _k.DEFAULT_BLOCK_M,
+                 block_m="auto",
                  force_interpret: bool = False) -> jax.Array:
     """Fused A^T(A beta - y); falls back to interpret mode off-TPU."""
+    block_m = resolve_block("coded_grad", (a.shape[0], a.shape[1]),
+                            block_m, _k.DEFAULT_BLOCK_M)
     return _k.lsq_gradient(a, y, beta, block_m=block_m,
-                           interpret=force_interpret or not _on_tpu())
+                           interpret=force_interpret or not on_tpu())
 
 
 reference = _ref.lsq_gradient

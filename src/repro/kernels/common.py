@@ -1,0 +1,52 @@
+"""Shared backend detection + tile resolution for the Pallas kernel ops.
+
+Every `kernels/*/ops.py` wrapper needs the same two decisions:
+
+  * which backend is live (TPU runs the compiled kernel, anything else
+    runs interpret mode) — previously a copy-pasted `_on_tpu()` per
+    subpackage, now the ONE `backend()` / `on_tpu()` pair, also reused
+    by the autotuner's cache key (`repro.tune.cache`);
+  * which tile to run with — `resolve_block` turns the `block="auto"`
+    sentinel into a concrete tile by consulting the persisted tuning
+    cache (`repro.tune.cache.lookup_block`), falling back to the
+    kernel's hard-coded default on a cold miss.  Resolution is a pure
+    host-side read: it NEVER autotunes implicitly — populating the
+    cache is `python -m repro.tune`'s job (see API.md "The autotuning
+    layer").
+"""
+from __future__ import annotations
+
+import jax
+
+AUTO = "auto"
+
+
+def backend() -> str:
+    """The live JAX backend name — also the tuning-cache key component."""
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    return backend() == "tpu"
+
+
+def resolve_block(family: str, shape: tuple[int, ...], block,
+                  default):
+    """Concrete tile for `block`: pass-through unless `block == "auto"`.
+
+    `shape` is the kernel family's logical problem shape (e.g.
+    `(c, ell, d)` for encode, `(m, d)` for coded_grad) — bucketed by the
+    cache, so nearby shapes share an entry.  Shapes must be concrete by
+    resolution time; inside a jit trace they are (shapes are static).
+    Cold miss -> `default`, bit-for-bit the pre-autotuner behaviour.
+    """
+    if block != AUTO:
+        return block
+    from repro.tune.cache import lookup_block
+
+    found = lookup_block(family, shape)
+    if found is None:
+        return default
+    if isinstance(default, int):  # 1-d tile families (coded_grad)
+        return int(found[0])
+    return tuple(int(b) for b in found)

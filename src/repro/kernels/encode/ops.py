@@ -1,5 +1,12 @@
 """jit'd wrappers for the fused parity-encoding kernels (interpret on CPU).
 
+Every entry point accepts `block="auto"` (the default): the tile is
+resolved host-side against the persisted tuning cache
+(`repro.tune.cache`, keyed by `(family, shape bucket, backend)`) before
+the jitted kernel is entered; a cold miss falls back to the hard-coded
+`DEFAULT_BLOCK` bit-for-bit.  Resolution never autotunes — populate the
+cache with `python -m repro.tune`.
+
 Three entry points:
 
   * `encode_parity` — one client's P = G (W X) with the diagonal weighting
@@ -24,25 +31,24 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import on_tpu, resolve_block
+
 from . import encode as _k
 from . import ref as _ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def encode_parity(g: jax.Array, w: jax.Array, x: jax.Array,
-                  block=_k.DEFAULT_BLOCK,
+                  block="auto",
                   force_interpret: bool = False) -> jax.Array:
+    block = resolve_block("encode", (g.shape[0], g.shape[1], x.shape[1]),
+                          block, _k.DEFAULT_BLOCK)
     return _k.encode_parity(g, w, x, block=block,
-                            interpret=force_interpret or not _on_tpu())
+                            interpret=force_interpret or not on_tpu())
 
 
-@partial(jax.jit, static_argnames=("c", "kind", "block", "force_interpret"))
 def encode_fleet(keys: jax.Array, xs: jax.Array, ys: jax.Array,
                  weights: jax.Array, c: int, kind: str = "normal",
-                 block=_k.DEFAULT_BLOCK,
+                 block="auto",
                  force_interpret: bool = False) -> tuple[jax.Array, jax.Array]:
     """Streamed fused fleet encoding: (X~ (c, d), y~ (c,)).
 
@@ -50,6 +56,15 @@ def encode_fleet(keys: jax.Array, xs: jax.Array, ys: jax.Array,
           `core.encoding.encode_fleet`, so both paths draw identical G_i)
     xs: (n, ell, d), ys: (n, ell), weights: (n, ell)
     """
+    block = resolve_block("encode", (c, xs.shape[1], xs.shape[2]),
+                          block, _k.DEFAULT_BLOCK)
+    return _encode_fleet_jit(keys, xs, ys, weights, c, kind, block,
+                             force_interpret)
+
+
+@partial(jax.jit, static_argnames=("c", "kind", "block", "force_interpret"))
+def _encode_fleet_jit(keys, xs, ys, weights, c, kind, block,
+                      force_interpret):
     from repro.core.encoding import encode_fleet_streamed
 
     return encode_fleet_streamed(
@@ -58,16 +73,17 @@ def encode_fleet(keys: jax.Array, xs: jax.Array, ys: jax.Array,
 
 
 def encode_parity_prng(key: jax.Array, w: jax.Array, x: jax.Array, c: int,
-                       kind: str = "normal", block=_k.DEFAULT_BLOCK,
+                       kind: str = "normal", block="auto",
                        force_interpret: bool = False) -> jax.Array:
+    block = resolve_block("encode_prng", (c, x.shape[0], x.shape[1]),
+                          block, _k.DEFAULT_BLOCK)
     return _k.encode_parity_prng(key, w, x, c, kind=kind, block=block,
-                                 interpret=force_interpret or not _on_tpu())
+                                 interpret=force_interpret or not on_tpu())
 
 
-@partial(jax.jit, static_argnames=("c", "kind", "block", "force_interpret"))
 def encode_fleet_prng(key: jax.Array, xs: jax.Array, ys: jax.Array,
                       weights: jax.Array, c: int, kind: str = "normal",
-                      block=_k.DEFAULT_BLOCK, force_interpret: bool = False
+                      block="auto", force_interpret: bool = False
                       ) -> tuple[jax.Array, jax.Array]:
     """Streamed fleet encoding with in-kernel generators: (X~, y~) with NO
     (c, ell) generator block ever materialized, per client or otherwise.
@@ -78,6 +94,15 @@ def encode_fleet_prng(key: jax.Array, xs: jax.Array, ys: jax.Array,
          host-PRNG paths.
     xs: (n, ell, d), ys: (n, ell), weights: (n, ell)
     """
+    block = resolve_block("encode_prng", (c, xs.shape[1], xs.shape[2]),
+                          block, _k.DEFAULT_BLOCK)
+    return _encode_fleet_prng_jit(key, xs, ys, weights, c, kind, block,
+                                  force_interpret)
+
+
+@partial(jax.jit, static_argnames=("c", "kind", "block", "force_interpret"))
+def _encode_fleet_prng_jit(key, xs, ys, weights, c, kind, block,
+                           force_interpret):
     n, ell, d = xs.shape
     keys = jax.random.split(key, n)
     xa = jnp.concatenate([xs, ys[..., None]], axis=-1)  # labels ride along

@@ -1,21 +1,17 @@
 """jit'd wrapper for the flash-attention kernel (interpret on CPU)."""
 from __future__ import annotations
 
-import jax
+from repro.kernels.common import on_tpu
 
 from . import flash_attn as _k
 from . import ref as _ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def causal_attention(q, k, v, block_q: int = _k.DEFAULT_BQ,
                      block_k: int = _k.DEFAULT_BK,
                      force_interpret: bool = False):
     return _k.causal_attention(q, k, v, block_q=block_q, block_k=block_k,
-                               interpret=force_interpret or not _on_tpu())
+                               interpret=force_interpret or not on_tpu())
 
 
 reference = _ref.causal_attention

@@ -1,19 +1,15 @@
 """jit'd wrapper for the SSD intra-chunk kernel (interpret on CPU)."""
 from __future__ import annotations
 
-import jax
+from repro.kernels.common import on_tpu
 
 from . import ssd as _k
 from . import ref as _ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def ssd_chunk(xc, dtc, da, bc, cc, force_interpret: bool = False):
     return _k.ssd_chunk(xc, dtc, da, bc, cc,
-                        interpret=force_interpret or not _on_tpu())
+                        interpret=force_interpret or not on_tpu())
 
 
 reference = _ref.ssd_chunk_reference

@@ -1,0 +1,38 @@
+"""`repro.tune` — roofline-pruned Pallas tile autotuner + persisted cache.
+
+Public surface:
+
+  * `lookup_block`, `TileCache`, `bucket_shape` — the cache layer (pure
+    stdlib; safe to import from kernel wrappers);
+  * `autotune`, `tune_shapes`, `TuneResult` — the tuner (imports the
+    kernel families lazily so `repro.tune.cache` stays light on the
+    `block="auto"` hot path);
+  * `FAMILIES`, `CI_SHAPES` — the kernel-family registry.
+
+See API.md "The autotuning layer" for the cache key/layout and the
+`block="auto"` contract.
+"""
+from .cache import (CACHE_VERSION, TileCache, bucket_shape, cache_key,
+                    defaults_path, lookup_block, lookup_entry,
+                    user_cache_path)
+
+_LAZY = {
+    "autotune": "tuner", "tune_shapes": "tuner", "TuneResult": "tuner",
+    "candidate_terms": "tuner", "roofline_bound": "tuner",
+    "prune": "tuner", "measure": "tuner",
+    "FAMILIES": "families", "CI_SHAPES": "families",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["CACHE_VERSION", "TileCache", "bucket_shape", "cache_key",
+           "defaults_path", "lookup_block", "lookup_entry",
+           "user_cache_path", *_LAZY]

@@ -1,0 +1,174 @@
+"""Kernel-family descriptors: what the autotuner can tune.
+
+A family packages everything the tuner needs to treat one Pallas kernel
+generically:
+
+  * `name`           — the cache-key family component;
+  * `default_block`  — the hard-coded tile `block="auto"` falls back to;
+  * `candidate_blocks(shape, backend)` — the tile grid to search.  On
+    TPU candidates are filtered by a VMEM-footprint budget (resident
+    tiles must fit alongside double-buffering headroom); off-TPU the
+    kernels run in interpret mode where the only "memory" is host RAM,
+    so the budget is generous and the grid reaches the whole-problem
+    tile (fewest grid steps — exactly what interpret mode rewards);
+  * `bind(shape, block)` — a pure array function + ShapeDtypeStructs,
+    used both for the dry-run lowering (roofline pruning) and, with
+    `make_args`, for measuring the survivors.
+
+To add a family: implement the four members below and register the
+instance in `FAMILIES` — `block="auto"` support in its ops wrapper is
+then one `resolve_block(...)` call (see API.md "The autotuning layer").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common as kcommon
+from repro.kernels.coded_grad import coded_grad as _cg
+from repro.kernels.encode import encode as _en
+
+# Resident-tile budget on TPU: tiles for all operands + accumulator must
+# sit in VMEM (~16 MB/core) with room for double buffering.
+TPU_TILE_BYTES = 8 * 2 ** 20
+# Interpret mode allocates host buffers — cap only pathological tiles.
+HOST_TILE_BYTES = 512 * 2 ** 20
+
+
+def _pow2_options(dim: int, floor: int = 128) -> list[int]:
+    """{floor, 2*floor, ...} clipped to dim's power-of-two ceiling."""
+    from .cache import _pow2ceil
+
+    top = _pow2ceil(dim)
+    opts, v = [], floor
+    while v < top:
+        opts.append(v)
+        v *= 2
+    opts.append(top)
+    return opts
+
+
+def _tile_budget(backend: str) -> int:
+    return TPU_TILE_BYTES if backend == "tpu" else HOST_TILE_BYTES
+
+
+class EncodeFamily:
+    """`kernels/encode` dense variant: P = G (W X), tile (bc, bd, bl)."""
+
+    name = "encode"
+    default_block = _en.DEFAULT_BLOCK
+
+    def candidate_blocks(self, shape, backend: str) -> list[tuple]:
+        c, ell, d = shape
+        budget = _tile_budget(backend)
+        cands = []
+        for bc in _pow2_options(c):
+            for bd in _pow2_options(d):
+                for bl in _pow2_options(ell):
+                    tile_bytes = 4 * (bc * bl + bl * bd + bc * bd + bl)
+                    if tile_bytes <= budget:
+                        cands.append((bc, bd, bl))
+        if self.default_block not in cands:
+            cands.append(self.default_block)
+        return cands
+
+    def bind(self, shape, block):
+        c, ell, d = shape
+        interpret = not kcommon.on_tpu()
+
+        def fn(g, w, x):
+            return _en.encode_parity(g, w, x, block=block,
+                                     interpret=interpret)
+
+        sds = (jax.ShapeDtypeStruct((c, ell), jnp.float32),
+               jax.ShapeDtypeStruct((ell,), jnp.float32),
+               jax.ShapeDtypeStruct((ell, d), jnp.float32))
+        return fn, sds
+
+    def make_args(self, shape, seed: int = 0):
+        c, ell, d = shape
+        key = jax.random.PRNGKey(seed)
+        return (jax.random.normal(key, (c, ell)),
+                jax.random.uniform(jax.random.fold_in(key, 1), (ell,)),
+                jax.random.normal(jax.random.fold_in(key, 2), (ell, d)))
+
+
+class EncodePrngFamily(EncodeFamily):
+    """`kernels/encode` in-kernel threefry variant (fleet-scale path:
+    the generator never materializes, so tiles govern BOTH matmul grid
+    overhead and how often generator tiles are re-hashed)."""
+
+    name = "encode_prng"
+
+    def bind(self, shape, block):
+        c, ell, d = shape
+        interpret = not kcommon.on_tpu()
+
+        def fn(key, w, x):
+            return _en.encode_parity_prng(key, w, x, c, block=block,
+                                          interpret=interpret)
+
+        sds = (jax.ShapeDtypeStruct((2,), jnp.uint32),
+               jax.ShapeDtypeStruct((ell,), jnp.float32),
+               jax.ShapeDtypeStruct((ell, d), jnp.float32))
+        return fn, sds
+
+    def make_args(self, shape, seed: int = 0):
+        c, ell, d = shape
+        key = jax.random.PRNGKey(seed)
+        return (jax.random.PRNGKey(seed + 1),
+                jax.random.uniform(jax.random.fold_in(key, 1), (ell,)),
+                jax.random.normal(jax.random.fold_in(key, 2), (ell, d)))
+
+
+class CodedGradFamily:
+    """`kernels/coded_grad`: g = A^T (A beta - y), 1-d row tile (bm,)."""
+
+    name = "coded_grad"
+    default_block = (_cg.DEFAULT_BLOCK_M,)
+
+    def candidate_blocks(self, shape, backend: str) -> list[tuple]:
+        m, d = shape
+        budget = _tile_budget(backend)
+        cands = []
+        for bm in _pow2_options(m, floor=256):
+            # A tile + y slice + beta + (1, d) accumulator
+            tile_bytes = 4 * (bm * d + bm + 2 * d)
+            if tile_bytes <= budget:
+                cands.append((bm,))
+        if self.default_block not in cands:
+            cands.append(self.default_block)
+        return cands
+
+    def bind(self, shape, block):
+        m, d = shape
+        interpret = not kcommon.on_tpu()
+
+        def fn(a, y, beta):
+            return _cg.lsq_gradient(a, y, beta, block_m=int(block[0]),
+                                    interpret=interpret)
+
+        sds = (jax.ShapeDtypeStruct((m, d), jnp.float32),
+               jax.ShapeDtypeStruct((m,), jnp.float32),
+               jax.ShapeDtypeStruct((d,), jnp.float32))
+        return fn, sds
+
+    def make_args(self, shape, seed: int = 0):
+        m, d = shape
+        key = jax.random.PRNGKey(seed)
+        return (jax.random.normal(key, (m, d)),
+                jax.random.normal(jax.random.fold_in(key, 1), (m,)),
+                jax.random.normal(jax.random.fold_in(key, 2), (d,)))
+
+
+FAMILIES = {f.name: f for f in
+            (EncodeFamily(), EncodePrngFamily(), CodedGradFamily())}
+
+# The shapes `python -m repro.tune --ci-defaults` tunes and commits to
+# `defaults.json`: the paper's §IV composite-parity shapes plus the
+# fleet-scale shapes `benchmarks/kernels.py` sweeps in CI.
+CI_SHAPES: dict[str, list[tuple]] = {
+    "encode": [(936, 300, 500), (2048, 512, 512)],
+    "encode_prng": [(936, 300, 500), (2048, 512, 512)],
+    "coded_grad": [(936, 500), (8192, 512)],
+}
