@@ -156,10 +156,12 @@ def main(smoke: bool = False) -> None:
         dump_bench("kernels", gates)
     if smoke:
         floor = float(os.environ.get("KERNELS_SMOKE_MIN_SPEEDUP", "1.2"))
-        assert best_encode >= floor, (
-            f"tuned encode tiles beat defaults only {best_encode:.2f}x "
-            f"(< {floor}x) — stale src/repro/tune/defaults.json or a "
-            f"kernel/tuner regression")
+        # SystemExit, not assert: the gate must survive `python -O`
+        if best_encode < floor:
+            raise SystemExit(
+                f"tuned encode tiles beat defaults only {best_encode:.2f}x "
+                f"(< {floor}x) — stale src/repro/tune/defaults.json or a "
+                f"kernel/tuner regression")
         print(f"kernels smoke OK: tuned encode {best_encode:.2f}x "
               f">= {floor}x over default tiles")
 

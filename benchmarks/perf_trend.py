@@ -40,28 +40,42 @@ import json
 import os
 import sys
 
+# Patterns starting with "_" match only as a name suffix ("_s" must not
+# swallow counts like n_samples); the rest match anywhere in the name.
 LOWER_BETTER = ("_us", "us_per_call", "_s", "time", "latency", "nmse",
                 "bytes", "budget")
 HIGHER_BETTER = ("speedup", "ratio", "_x", "per_sec", "throughput",
                  "sessions_per", "epochs_per")
 
 
+def _matches(low: str, pat: str) -> bool:
+    return low.endswith(pat) if pat.startswith("_") else pat in low
+
+
 def classify(name: str) -> str | None:
     """'lower' | 'higher' | None (ungated) from the metric name."""
     low = name.lower()
-    if any(pat in low for pat in HIGHER_BETTER):
+    if any(_matches(low, pat) for pat in HIGHER_BETTER):
         return "higher"
-    if any(pat in low for pat in LOWER_BETTER):
+    if any(_matches(low, pat) for pat in LOWER_BETTER):
         return "lower"
     return None
 
 
-def load_bench_dir(path: str) -> dict[str, dict]:
+def load_bench_dir(path: str, exclude: str | None = None) -> dict[str, dict]:
     """{benchmark name: payload} for every BENCH_*.json under `path`
-    (recursive — artifact downloads nest files in per-run subdirs)."""
+    (recursive — artifact downloads nest files in per-run subdirs).
+
+    Files under `exclude` are skipped: in CI the new dir is the workspace
+    root and the baseline dir sits inside it, so without the exclusion
+    the baseline's own files would overwrite the fresh run's entries and
+    the trend gate would diff the baseline against itself."""
+    excl = os.path.realpath(exclude) + os.sep if exclude else None
     out: dict[str, dict] = {}
     for f in sorted(glob.glob(os.path.join(path, "**", "BENCH_*.json"),
                               recursive=True)):
+        if excl and os.path.realpath(f).startswith(excl):
+            continue
         try:
             with open(f) as fh:
                 payload = json.load(fh)
@@ -141,7 +155,7 @@ def main(argv=None) -> int:
                  if p.strip())
 
     baseline = load_bench_dir(args.baseline_dir)
-    new = load_bench_dir(args.new_dir)
+    new = load_bench_dir(args.new_dir, exclude=args.baseline_dir)
     if not baseline:
         print(f"perf-trend: no baseline artifacts under "
               f"{args.baseline_dir!r} — nothing to compare")

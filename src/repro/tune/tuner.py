@@ -103,6 +103,11 @@ def prune(candidates: list, bounds_us: list,
     MODEL: its lower bound alone exceeds what the best candidate could
     take even running `slack x` above its own bound."""
     best = min(bounds_us)
+    if best <= 0:
+        # Degenerate lowering (zero roofline bound): the slack band would
+        # collapse to 0 and prune every positive-bound candidate, so the
+        # model can't rank anything — measure them all instead.
+        return list(candidates), []
     survivors = [c for c, b in zip(candidates, bounds_us)
                  if b <= slack * best]
     pruned = [c for c, b in zip(candidates, bounds_us)

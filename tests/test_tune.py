@@ -126,6 +126,15 @@ def test_prune_keeps_within_slack_of_best():
     assert sorted(survivors + pruned) == sorted(cands)
 
 
+def test_prune_zero_bound_keeps_everything():
+    """A degenerate lowering with a 0 roofline bound must not collapse
+    the slack band and prune every positive-bound candidate."""
+    cands = [(256,), (512,), (1024,)]
+    survivors, pruned = tuner.prune(cands, [0.0, 5.0, 9.0], slack=2.0)
+    assert survivors == cands
+    assert pruned == []
+
+
 def test_roofline_bound_is_binding_term():
     assert tuner.roofline_bound({"t_compute": 2.0, "t_memory": 5.0}) == 5.0
     assert tuner.roofline_bound({"t_compute": 7.0, "t_memory": 5.0}) == 7.0
@@ -325,6 +334,14 @@ def test_perf_trend_classify_directions():
     assert perf_trend.classify("gates.n_clients") is None
 
 
+def test_perf_trend_classify_suffix_only_for_underscore_patterns():
+    """'_s' must match only as a suffix: counts like n_samples stay
+    ungated instead of being silently gated lower-is-better."""
+    assert perf_trend.classify("gates.n_samples") is None
+    assert perf_trend.classify("gates.n_sessions") is None
+    assert perf_trend.classify("gates.wall_s") == "lower"
+
+
 def test_perf_trend_identical_passes(tmp_path):
     base, new = str(tmp_path / "b"), str(tmp_path / "n")
     _write(base, _bench_payload())
@@ -380,6 +397,21 @@ def test_perf_trend_missing_baseline_is_ok(tmp_path):
     _write(new, _bench_payload())
     assert perf_trend.main(["--baseline-dir", empty,
                             "--new-dir", new]) == 0
+
+
+def test_perf_trend_baseline_nested_inside_new_dir(tmp_path):
+    """CI layout: --new-dir is the workspace root and the baseline dir
+    sits INSIDE it.  The new-dir scan must skip the baseline's own
+    files, or it diffs the baseline against itself and a real
+    regression passes silently."""
+    root = str(tmp_path)
+    base = os.path.join(root, "perf_baseline")
+    _write(base, _bench_payload(us=1000.0, speedup=10.0))
+    _write(root, _bench_payload(us=5000.0, speedup=2.0))  # regressed run
+    new = perf_trend.load_bench_dir(root, exclude=base)
+    assert new["kernels"]["records"][0]["us_per_call"] == 5000.0
+    assert perf_trend.main(["--baseline-dir", base,
+                            "--new-dir", root]) == 1
 
 
 def test_perf_trend_recurses_into_artifact_subdirs(tmp_path):
