@@ -1,0 +1,206 @@
+"""Fleet-scale smoke benchmark: the `repro.fleet` layer end to end.
+
+Three sections, each gated in `--smoke` mode:
+
+  * plan-scale — `solve_fleet` plans an n = 100k-client `mega_fleet`
+    redundancy problem (sharded over the forced host-device mesh,
+    chunk-streamed within each shard) under a hard wall-time budget, and
+    the resulting loads are validated against the per-device caps.
+  * tiered encode — `encode_fleet_tiered` streams a tier-partitioned
+    composite parity through the in-kernel-PRNG path at the fleet-scale
+    per-client shapes (tiny ell/d), asserts the tuned-tile cache HITS on
+    that bucket (the committed `tune/defaults.json` must cover it — no
+    cold miss on CI), and checks the T-tier result against the flat
+    single-pass encode.
+  * subsample sublinearity — `sample_tier_rounds` under a fixed
+    `with_round_budget` participant budget is timed at n = 10k and
+    n = 100k; O(participants) scheduling keeps the wall-time ratio near
+    1 while linear scheduling would pay ~10x.  The ratio is gated as
+    `subsample_cost_growth` (lower is better; see perf_trend).
+
+    PYTHONPATH=src python -m benchmarks.perf_fleet [--n 100000]
+    PYTHONPATH=src python -m benchmarks.perf_fleet --smoke   # CI gate
+
+`--smoke` asserts the gates and writes BENCH_plan_scale.json for the CI
+artifact upload (consumed by the perf-trend stage across PRs).
+"""
+from __future__ import annotations
+
+import os
+
+# the sharded fleet solve wants >1 host device: default to one per
+# physical core (CI's workflow env wins when set).  Must happen before
+# jax initializes.
+os.environ.setdefault(
+    "XLA_FLAGS",
+    f"--xla_force_host_platform_device_count={os.cpu_count() or 1}")
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.fleet import (FleetTopology, encode_fleet_tiered,
+                         sample_tier_rounds, solve_fleet)
+from repro.kernels.encode import ops as encode_ops
+from repro.plan.solver import PlanRequest
+from repro.sim.network import mega_fleet
+from repro.tune.cache import lookup_block
+
+from .common import dump_bench, emit
+
+FLEET_N = 100_000        # planned fleet size (the acceptance scale)
+FLEET_D = 32             # per-point feature dim at fleet scale
+POINTS_LO, POINTS_HI = 4, 16   # per-client shard sizes (caps)
+C_UP = 4096              # server parity-row cap (bounds the L_srv axis)
+PLAN_EPS_REL = 1e-2      # smoke-grade deadline tolerance
+PLAN_WALL_BUDGET_S = 120.0     # hard CPU-CI budget for the 100k solve
+
+ENC_CLIENTS = 256        # tiered-encode section: clients per pass
+ENC_TIERS = 4
+ENC_ELL = 8              # -> encode_prng bucket (128, 8, 32), covered
+ENC_C = 128              # by the committed tune/defaults.json
+
+SAMPLE_BUDGET = 512      # expected participants per round (both scales)
+SAMPLE_TIERS = 16
+SAMPLE_EPOCHS = 48
+GROWTH_CEIL = 3.0        # wall ratio at 10x fleet; linear would be ~10
+
+
+def bench_plan(n: int) -> tuple[float, dict]:
+    """Time one sharded fleet solve; returns (wall_s, gate values)."""
+    fleet = mega_fleet(n, d=FLEET_D, seed=0)
+    rng = np.random.default_rng(1)
+    data_sizes = rng.integers(POINTS_LO, POINTS_HI + 1, size=n)
+    req = PlanRequest(edge=fleet.edge, server=fleet.server,
+                      data_sizes=data_sizes, c_up=C_UP)
+
+    t0 = time.perf_counter()
+    plan = solve_fleet(req, eps_rel=PLAN_EPS_REL)
+    wall = time.perf_counter() - t0
+
+    assert plan.loads.shape == (n,)
+    assert np.all(plan.loads <= data_sizes), "plan exceeds device caps"
+    assert plan.expected_agg >= req.m * (1.0 - 1e-6), \
+        f"plan misses the return target: {plan.expected_agg} < {req.m}"
+    emit("perf_fleet/solve_fleet", wall * 1e6,
+         f"n={n};devices={len(jax.devices())};t_star={plan.t_star:.3f};"
+         f"c={plan.c};eps_rel={PLAN_EPS_REL}")
+    return wall, {"fleet_n": n, "plan_wall_s": round(wall, 2),
+                  "plan_wall_budget_s": PLAN_WALL_BUDGET_S,
+                  "plan_c": plan.c, "plan_t_star": round(plan.t_star, 4)}
+
+
+def bench_encode() -> tuple[float, bool]:
+    """Time the tiered streamed encode at fleet-scale per-client shapes;
+    returns (us_per_pass, tile_cache_hit)."""
+    key = jax.random.PRNGKey(3)
+    kx, ky, kw, kf = jax.random.split(key, 4)
+    xs = jax.random.normal(kx, (ENC_CLIENTS, ENC_ELL, FLEET_D))
+    ys = jax.random.normal(ky, (ENC_CLIENTS, ENC_ELL))
+    weights = jax.random.uniform(kw, (ENC_CLIENTS, ENC_ELL),
+                                 minval=0.5, maxval=1.5)
+    topo = FleetTopology.uniform(ENC_CLIENTS, ENC_TIERS)
+
+    cache_hit = lookup_block(
+        "encode_prng", (ENC_C, ENC_ELL, FLEET_D)) is not None
+
+    x_t, y_t = encode_fleet_tiered(kf, xs, ys, weights, ENC_C, topo)
+    x_flat, y_flat = encode_ops.encode_fleet_prng(kf, xs, ys, weights,
+                                                  ENC_C)
+    np.testing.assert_allclose(np.asarray(x_t), np.asarray(x_flat),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_flat),
+                               rtol=1e-4, atol=1e-4)
+
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        x_t, y_t = encode_fleet_tiered(kf, xs, ys, weights, ENC_C, topo)
+    jax.block_until_ready((x_t, y_t))
+    us = (time.perf_counter() - t0) * 1e6 / reps
+    emit("perf_fleet/encode_tiered", us,
+         f"clients={ENC_CLIENTS};tiers={ENC_TIERS};c={ENC_C};"
+         f"ell={ENC_ELL};d={FLEET_D};tile_cache_hit={cache_hit}")
+    return us, cache_hit
+
+
+def bench_subsample(n_small: int, n_large: int) -> tuple[float, dict]:
+    """Wall-time growth of budgeted round scheduling at 10x the fleet."""
+    def run(n: int) -> float:
+        fleet = mega_fleet(n, d=FLEET_D, seed=0)
+        rng = np.random.default_rng(2)
+        loads = rng.integers(POINTS_LO, POINTS_HI + 1, size=n)
+        topo = FleetTopology.uniform(
+            n, SAMPLE_TIERS).with_round_budget(SAMPLE_BUDGET)
+        best = np.inf
+        for _ in range(2):  # best-of-2: the gate is a ratio of small walls
+            t0 = time.perf_counter()
+            stats = sample_tier_rounds(topo, fleet.edge, loads,
+                                       SAMPLE_EPOCHS, rng)
+            best = min(best, time.perf_counter() - t0)
+        expect = SAMPLE_BUDGET * SAMPLE_EPOCHS
+        assert stats.total_participants < 4 * expect, \
+            f"budget not honored: {stats.total_participants} participants"
+        return best
+
+    t_small = run(n_small)
+    t_large = run(n_large)
+    growth = t_large / max(t_small, 1e-9)
+    emit("perf_fleet/subsample_small", t_small * 1e6,
+         f"n={n_small};budget={SAMPLE_BUDGET};epochs={SAMPLE_EPOCHS}")
+    emit("perf_fleet/subsample_large", t_large * 1e6,
+         f"n={n_large};budget={SAMPLE_BUDGET};epochs={SAMPLE_EPOCHS}")
+    emit("perf_fleet/subsample_growth", 0.0,
+         f"wall_ratio_at_10x_fleet={growth:.2f};ceil={GROWTH_CEIL}")
+    return growth, {"subsample_budget": SAMPLE_BUDGET,
+                    "subsample_small_s": round(t_small, 4),
+                    "subsample_large_s": round(t_large, 4),
+                    "subsample_cost_growth": round(growth, 3),
+                    "subsample_growth_ceil": GROWTH_CEIL}
+
+
+def main(n: int = FLEET_N, smoke: bool = False) -> None:
+    plan_wall, plan_gates = bench_plan(n)
+    enc_us, cache_hit = bench_encode()
+    growth, sub_gates = bench_subsample(max(n // 10, 1000), n)
+
+    print(f"\nfleet smoke: {n}-client plan {plan_wall:.1f}s "
+          f"({len(jax.devices())} shards), tiered encode "
+          f"{enc_us / 1e3:.1f}ms/pass (cache hit: {cache_hit}), "
+          f"budgeted-round growth at 10x fleet {growth:.2f}x")
+
+    if smoke:
+        # artifact FIRST: a regression is exactly when the measured
+        # values must survive into the uploaded BENCH_plan_scale.json
+        try:
+            assert plan_wall <= PLAN_WALL_BUDGET_S, \
+                f"fleet solve took {plan_wall:.1f}s " \
+                f"(budget {PLAN_WALL_BUDGET_S}s)"
+            assert cache_hit, \
+                "encode_prng tile cache MISSED the fleet bucket " \
+                f"({ENC_C}, {ENC_ELL}, {FLEET_D}) — regenerate " \
+                "tune/defaults.json (python -m repro.tune --ci-defaults)"
+            assert growth <= GROWTH_CEIL, \
+                f"budgeted round scheduling grew {growth:.2f}x at 10x " \
+                f"the fleet (ceiling {GROWTH_CEIL}x — should be ~flat)"
+        finally:
+            dump_bench("plan_scale", gates={
+                **plan_gates,
+                "encode_tiered_us": round(enc_us, 1),
+                **sub_gates,
+            })
+        print("perf_fleet --smoke OK (wall budget, tile cache, "
+              "sublinearity held)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=FLEET_N,
+                    help="planned fleet size")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: assert the gates, write "
+                         "BENCH_plan_scale.json")
+    args = ap.parse_args()
+    main(n=args.n, smoke=args.smoke)

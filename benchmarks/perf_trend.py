@@ -11,7 +11,7 @@ silently across PRs.
 Metric direction is classified from the name:
 
   * lower-is-better:  *_us / us_per_call, *_s, *time*, *latency*,
-                      *nmse*, *bytes*, *budget*
+                      *nmse*, *bytes*, *budget*, *growth*
   * higher-is-better: *speedup*, *ratio*, *_x, *per_sec*, *throughput*
   * unknown names are reported but never gated.
 
@@ -42,8 +42,11 @@ import sys
 
 # Patterns starting with "_" match only as a name suffix ("_s" must not
 # swallow counts like n_samples); the rest match anywhere in the name.
+# "growth" covers scaling-cost ratios (e.g. the fleet smoke's
+# subsample_cost_growth: wall time at 10x the fleet over wall time at 1x
+# — sublinear scheduling keeps it near 1, linear scheduling near 10).
 LOWER_BETTER = ("_us", "us_per_call", "_s", "time", "latency", "nmse",
-                "bytes", "budget")
+                "bytes", "budget", "growth")
 HIGHER_BETTER = ("speedup", "ratio", "_x", "per_sec", "throughput",
                  "sessions_per", "epochs_per")
 

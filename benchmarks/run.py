@@ -18,8 +18,8 @@ def main(argv=None) -> int:
                     help="reduced epoch counts (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig3,fig4,fig5,"
-                         "schemes,privacy,ablation,noniid,serve,kernels,"
-                         "roofline")
+                         "schemes,privacy,ablation,noniid,serve,fleet,"
+                         "kernels,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -58,6 +58,10 @@ def main(argv=None) -> int:
     if want("serve"):
         from . import perf_serve
         perf_serve.main(epochs=240 if args.fast else 400)
+    if want("fleet"):
+        from . import perf_fleet
+        perf_fleet.main(n=perf_fleet.FLEET_N // 10 if args.fast
+                        else perf_fleet.FLEET_N)
     if want("kernels"):
         from . import kernels
         kernels.main()

@@ -23,6 +23,9 @@
 #   kernels-smoke  tuned tiles >= 1.2x default  -> BENCH_kernels.json
 #                  (block="auto" vs hard-coded tiles at fleet scale;
 #                  floor tunable via KERNELS_SMOKE_MIN_SPEEDUP)
+#   fleet-smoke    100k-client sharded plan under wall budget, tiered
+#                  encode tile-cache hit, budgeted-round sublinearity
+#                                               -> BENCH_plan_scale.json
 #   perf-trend     compares every BENCH_*.json metric against the
 #                  previous run's artifacts in $PERF_BASELINE_DIR
 #                  (downloaded by ci.yml; SKIPPED with a notice when
@@ -109,6 +112,7 @@ if [[ "$TIER" != "fast" ]]; then
     run_stage sweep-smoke python -m benchmarks.perf_sweep --smoke
     run_stage serve-smoke python -m benchmarks.perf_serve --smoke
     run_stage kernels-smoke python -m benchmarks.kernels --smoke
+    run_stage fleet-smoke python -m benchmarks.perf_fleet --smoke
     run_stage perf-trend perf_trend
 fi
 

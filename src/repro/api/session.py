@@ -45,6 +45,8 @@ never otherwise.
 from __future__ import annotations
 
 import dataclasses
+import os
+from collections import OrderedDict
 from typing import (TYPE_CHECKING, Any, Callable, Dict, Hashable, List,
                     Optional, Sequence)
 
@@ -67,11 +69,44 @@ if TYPE_CHECKING:  # annotation-only: keeps the api layer free of sim imports
 # delta sweep compiles once per shape bucket instead of once per Session,
 # and solo re-runs of equivalent sessions never retrace.  Each engine's
 # closure pins its bucket's first strategy state (which can hold MB-scale
-# parity arrays), so the cache is BOUNDED: oldest entries evict once
-# _ENGINE_CACHE_MAX distinct (bucket, lane-count) engines exist, instead
-# of growing for process lifetime.
-_ENGINE_CACHE: Dict[Hashable, Callable] = {}
+# parity arrays), so the cache is a BOUNDED LRU: least-recently-used
+# entries evict once the cap is exceeded (fleet-scale bucketing — many
+# topologies × shape buckets — would otherwise grow it for process
+# lifetime).  Cap defaults to _ENGINE_CACHE_MAX; override per process
+# with REPRO_ENGINE_CACHE_MAX.  All lookups go through `cache_engine`,
+# shared with the serving engine (`repro.serving.fed_engine`).
+_ENGINE_CACHE: "OrderedDict[Hashable, Callable]" = OrderedDict()
 _ENGINE_CACHE_MAX = 64
+
+
+def engine_cache_max() -> int:
+    """Effective LRU capacity (env override, floor 1)."""
+    try:
+        return max(1, int(os.environ["REPRO_ENGINE_CACHE_MAX"]))
+    except (KeyError, ValueError):
+        return _ENGINE_CACHE_MAX
+
+
+def cache_engine(key: Hashable, build: Callable[[], Callable]) -> Callable:
+    """Fetch (or build) a compiled engine through the shared LRU.
+
+    A hit refreshes the key's recency; a miss builds, inserts, and evicts
+    least-recently-used entries past the cap.  Evicted engines keep
+    working for holders of a direct reference (the serving engine's lane
+    groups pin their own `step_fn`; sessions mirror engines in
+    `_engines`), so eviction never breaks an in-flight bucket — it only
+    forces the next cold lookup to recompile.
+    """
+    engine = _ENGINE_CACHE.get(key)
+    if engine is not None:
+        _ENGINE_CACHE.move_to_end(key)
+        return engine
+    engine = build()
+    _ENGINE_CACHE[key] = engine
+    cap = engine_cache_max()
+    while len(_ENGINE_CACHE) > cap:
+        _ENGINE_CACHE.popitem(last=False)
+    return engine
 
 _PRIMITIVES = (bool, int, float, str, bytes, type(None))
 
@@ -239,13 +274,10 @@ def _execute_lanes(entries: Sequence[tuple],
         args = (dev_b, arr_b, lr_b)
 
         engine_key = (key, b)
-        engine = _ENGINE_CACHE.get(engine_key)
-        if engine is None:
-            engine = _build_engine(sess0.strategy, state0, data, shared,
-                                   args)
-            while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
-                _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
-            _ENGINE_CACHE[engine_key] = engine
+        engine = cache_engine(
+            engine_key,
+            lambda: _build_engine(sess0.strategy, state0, data, shared,
+                                  args))
         out = np.asarray(engine(shared, *args))
         for j, i in enumerate(idxs):
             traces[i] = out[j]

@@ -182,6 +182,19 @@ class Strategy(Protocol):
     #     replicated copy of these operands instead of stacking them B
     #     times.  Omitting the declaration is always safe (everything is
     #     stacked per lane);
+    #   * tiered_contributions(state, dev, beta, arrivals, tier_masks) ->
+    #     ((T, d) tier partials, optional (d,) server term) — the
+    #     hierarchical form of `round_contributions` consumed by
+    #     `repro.fleet.HierarchicalCFL`: given (T, m) one-hot row masks
+    #     over the flat client-major layout, return per-tier partials via
+    #     `core.aggregation.tier_reduce` (full-width masked gemvs, so each
+    #     partial matches the flat contraction bit-for-bit) plus any
+    #     server-side term (parity gradients) that is NOT client-resident
+    #     and therefore bypasses the edge tier.  Contract:
+    #     `cross_tier_combine(partials) + server` must equal
+    #     `round_contributions` exactly for a single all-ones tier mask
+    #     and to T-term-reassociation ulp for any tier partition.
+    #     Strategies without the hook cannot be wrapped hierarchically;
     #   * serve_convergence(state, criterion) -> criterion — the serving
     #     engine's convergence hook (`repro.serving.fed_engine`): given
     #     the engine's per-lane `ConvergenceCriterion`, return a
@@ -234,6 +247,10 @@ class UncodedFL:
     def round_contributions(self, state, dev, beta, arrivals):
         resid = dev["x"] @ beta - dev["y"]
         return resid @ dev["x"]  # exact full gradient (Eq. 2)
+
+    def tiered_contributions(self, state, dev, beta, arrivals, tier_masks):
+        resid = dev["x"] @ beta - dev["y"]
+        return aggregation.tier_reduce(resid, dev["x"], tier_masks), None
 
     def uplink_bits(self, state: UncodedState, fleet: "FleetSpec",
                     epochs: int) -> float:
@@ -355,6 +372,20 @@ class CodedFL:
             use_kernel=self.use_kernel)
         return g_sys + arrivals["parity_ok"] * g_par
 
+    def tiered_contributions(self, state, dev, beta, arrivals, tier_masks):
+        # systematic partials reduce per edge tier; the parity gradient is
+        # computed AT the server on the composite parity data, so it rides
+        # as the server-side term and bypasses the tier stage entirely
+        resid = dev["x"] @ beta - dev["y"]
+        w = dev["w_sys"] * arrivals["received"][dev["row_client"]]
+        partials = aggregation.tier_reduce(resid * w, dev["x"], tier_masks)
+        if state.c == 0:
+            return partials, None
+        g_par = aggregation.parity_gradient(
+            dev["x_parity"], dev["y_parity"], beta,
+            use_kernel=self.use_kernel)
+        return partials, arrivals["parity_ok"] * g_par
+
     def uplink_bits(self, state: cfl.CFLState, fleet: "FleetSpec",
                     epochs: int) -> float:
         return cfl.coded_uplink_bits(state, fleet, epochs)
@@ -450,6 +481,13 @@ class GradientCodingFL:
         resid = dev["x"] @ beta - dev["y"]
         w = arrivals["group_ok"][dev["row_group"]]
         return (resid * w) @ dev["x"]
+
+    def tiered_contributions(self, state, dev, beta, arrivals, tier_masks):
+        # every contribution is client-resident (the decoded group sums),
+        # so the whole gradient reduces through the edge tiers
+        resid = dev["x"] @ beta - dev["y"]
+        w = arrivals["group_ok"][dev["row_group"]]
+        return aggregation.tier_reduce(resid * w, dev["x"], tier_masks), None
 
     def uplink_bits(self, state: GradCodingState, fleet: "FleetSpec",
                     epochs: int) -> float:

@@ -66,6 +66,36 @@ def combine(partial_grads: jax.Array, received: jax.Array,
     return g_sys + parity_received * g_parity
 
 
+def tier_reduce(contrib: jax.Array, x: jax.Array,
+                tier_masks: jax.Array) -> jax.Array:
+    """Per-tier weighted reduce: (T, m) row masks × (m,) contrib × (m, d) x
+    → (T, d) tier partials (the edge stage of `repro.fleet`'s hierarchy).
+
+    Each tier partial is the FULL-WIDTH masked gemv `(contrib * mask) @ x`:
+    masked-out rows contribute exact ±0.0 terms, so the per-row
+    accumulation order of the flat contraction is unchanged and each
+    partial equals the flat contraction restricted to its tier
+    bit-for-bit.  `lax.map` keeps tiers sequential (like the lane
+    engine's per-lane map) so the per-tier expression graph is the flat
+    graph, merely masked.
+    """
+    return jax.lax.map(lambda mask: (contrib * mask) @ x, tier_masks)
+
+
+def cross_tier_combine(tier_partials: jax.Array) -> jax.Array:
+    """(T, d) tier partials → (d,) server aggregate.
+
+    The ONLY floating-point reassociation the hierarchy introduces: a
+    T-term sequential sum over tiers (fori_loop, matching the order an
+    edge→cloud uplink delivers them).  T == 1 is the identity, which is
+    what makes a single-tier topology bit-for-bit equal to the flat path.
+    """
+    def body(t, acc):
+        return acc + tier_partials[t]
+    return jax.lax.fori_loop(1, tier_partials.shape[0], body,
+                             tier_partials[0])
+
+
 @jax.jit
 def uncoded_full_gradient(xs: jax.Array, ys: jax.Array, beta: jax.Array) -> jax.Array:
     """Baseline uncoded FL gradient: every client, every point (Eq. 2).

@@ -1,0 +1,51 @@
+"""`repro.fleet` — hierarchical edge→cloud aggregation at production scale.
+
+The paper trains n = 24 devices against one server; the MEC follow-ups
+(CodedFedL, arXiv:2007.03273; low-latency wireless CFL, arXiv:2011.06223)
+organize production fleets into edge→cloud TIERS: each edge node
+aggregates its clients' contributions before the central server combines
+tiers.  This subsystem makes that topology first class and scales every
+planning/encoding/scheduling path to 1e5+ clients:
+
+  * `FleetTopology` — the tier assignment plus per-tier participation
+    probabilities (`sample_frac`), with inverse-probability gate weights
+    so subsampled rounds stay unbiased (the `StochasticCodedFL`
+    rho-weighting applied per client instead of per parity row).
+  * `HierarchicalCFL` — a `Strategy` wrapper turning ANY strategy that
+    implements the `tiered_contributions` hook (all five built-ins do)
+    into its two-stage hierarchical counterpart: per-tier weighted
+    reduce, then cross-tier combine.  Runs unchanged through `Session`,
+    `run_sweep` and the serving engine.
+  * `solve_fleet` — the redundancy solve for fleets too large for the
+    batched planner's one-device `(t_grid, n, L)` tensor: the device
+    axis is sharded over the local mesh (`launch.mesh.make_shard_mesh`)
+    and chunk-streamed per shard, so a 1e5-client plan solves without
+    ever materializing the full expected-return tensor.
+  * `encode_fleet_tiered` — composite-parity encoding routed tier by
+    tier through the in-kernel-PRNG Pallas path (`encode_fleet_prng`):
+    no generator block ever materializes, and each edge tier streams its
+    own partial composite before the cross-tier combine.
+  * `sample_tier_rounds` — fleet-scale round scheduling: per-epoch
+    participant draws and per-tier straggler maxima at O(participants)
+    cost, which is what makes subsampled round cost sublinear in n.
+
+Benchmarked/gated by `benchmarks/perf_fleet.py` → `BENCH_plan_scale.json`.
+"""
+from .aggregate import cross_tier_combine, tier_reduce
+from .encode import encode_fleet_tiered
+from .hierarchical import HierarchicalCFL, HierState
+from .plan import solve_fleet
+from .rounds import TierRoundStats, sample_tier_rounds
+from .topology import FleetTopology
+
+__all__ = [
+    "FleetTopology",
+    "HierarchicalCFL",
+    "HierState",
+    "solve_fleet",
+    "encode_fleet_tiered",
+    "tier_reduce",
+    "cross_tier_combine",
+    "sample_tier_rounds",
+    "TierRoundStats",
+]

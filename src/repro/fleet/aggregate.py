@@ -1,0 +1,29 @@
+"""Two-stage tier aggregation, numerically equal to flat aggregation.
+
+The flat path every built-in strategy runs is one masked contraction
+
+    g = (contrib * w) @ x                      # (m,) * (m,) @ (m, d)
+
+over the client-major row axis.  The hierarchical path computes the SAME
+contraction per tier with one-hot row masks and then combines tiers:
+
+    g_t = (contrib * w * mask_t) @ x           # tier partial, full width
+    g   = sum_t g_t                            # cross-tier combine
+
+Because `mask_t` is exactly 0.0/1.0, every masked-out row contributes an
+exact ±0.0 term, and the per-row accumulation ORDER of the contraction is
+unchanged — each tier partial equals the flat contraction with the other
+tiers' terms replaced by zeros.  The only reassociation the hierarchy
+introduces is the final T-term outer sum, so:
+
+  * a single-tier topology is bit-for-bit identical to the flat path;
+  * a T-tier topology differs from flat by at most the reassociation of
+    T partial sums (documented-ulp; see tests/test_fleet.py).
+
+The implementations live in `repro.core.aggregation` so strategy modules
+can reach them without importing this package (`repro.fleet.__init__`
+pulls in the api layer); this module is the fleet-facing surface.
+"""
+from repro.core.aggregation import cross_tier_combine, tier_reduce
+
+__all__ = ["tier_reduce", "cross_tier_combine"]

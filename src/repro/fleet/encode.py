@@ -1,0 +1,62 @@
+"""Fleet-scale streamed parity encoding, tier by tier.
+
+Each edge tier streams its OWN partial composite parity through the
+in-kernel-PRNG Pallas path (`kernels.encode.ops.encode_fleet_prng_keys`):
+no client's (c, ell) generator block ever materializes — generator tiles
+are regenerated inside the kernel from the client's key via counter-based
+threefry — and no single pass ever holds more than one tier's client
+shards.  The cloud then combines the T tier partials.
+
+Key layout: the fleet key is split ONCE into the (n, 2) per-client key
+table (exactly `core.encoding.encode_fleet`'s layout) and each tier
+slices its members' rows, so every client draws the same G_i it would in
+the flat pass regardless of the tier partition.  Consequences:
+
+  * a single all-client tier is bit-for-bit identical to
+    `encode_fleet_prng(key, ...)` (same scan, same order);
+  * a T-tier partition reassociates only the cross-client accumulation
+    (per-tier partial sums + a T-term combine), mirroring the
+    tier-aggregation ulp contract of `fleet.aggregate`.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.encode import ops as encode_ops
+
+from .topology import FleetTopology
+
+
+def encode_fleet_tiered(key: jax.Array, xs: jax.Array, ys: jax.Array,
+                        weights: jax.Array, c: int,
+                        topology: FleetTopology, kind: str = "normal",
+                        block="auto", force_interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Composite parity (X~ (c, d), y~ (c,)), encoded tier by tier.
+
+    key:      the fleet key (split per client internally — see module
+              docstring for the layout contract)
+    xs: (n, ell, d), ys: (n, ell), weights: (n, ell)
+    c:        parity rows
+    topology: tier partition; members stream in ascending client order
+              within each tier
+    """
+    if topology.n != xs.shape[0]:
+        raise ValueError(
+            f"topology covers {topology.n} clients but xs has "
+            f"{xs.shape[0]}")
+    keys = jax.random.split(key, topology.n)
+    x_par = y_par = None
+    for members in topology.tier_members():
+        idx = jnp.asarray(members)
+        x_t, y_t = encode_ops.encode_fleet_prng_keys(
+            keys[idx], xs[idx], ys[idx], weights[idx], c, kind=kind,
+            block=block, force_interpret=force_interpret)
+        if x_par is None:
+            x_par, y_par = x_t, y_t
+        else:  # cross-tier combine: the only reassociation vs the flat pass
+            x_par, y_par = x_par + x_t, y_par + y_t
+    return x_par, y_par

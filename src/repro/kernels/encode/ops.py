@@ -100,11 +100,27 @@ def encode_fleet_prng(key: jax.Array, xs: jax.Array, ys: jax.Array,
                                   force_interpret)
 
 
+def encode_fleet_prng_keys(keys: jax.Array, xs: jax.Array, ys: jax.Array,
+                           weights: jax.Array, c: int, kind: str = "normal",
+                           block="auto", force_interpret: bool = False
+                           ) -> tuple[jax.Array, jax.Array]:
+    """As `encode_fleet_prng`, with the per-client keys precomputed.
+
+    The tier-by-tier entry (`repro.fleet.encode_fleet_tiered`) splits the
+    fleet key ONCE and slices the (n, 2) key table per tier, so every
+    client draws exactly the G_i it would draw in the flat streamed pass
+    — a single all-client tier is bit-identical to `encode_fleet_prng`.
+    """
+    block = resolve_block("encode_prng", (c, xs.shape[1], xs.shape[2]),
+                          block, _k.DEFAULT_BLOCK)
+    return _encode_fleet_prng_keys_jit(keys, xs, ys, weights, c, kind,
+                                       block, force_interpret)
+
+
 @partial(jax.jit, static_argnames=("c", "kind", "block", "force_interpret"))
-def _encode_fleet_prng_jit(key, xs, ys, weights, c, kind, block,
-                           force_interpret):
+def _encode_fleet_prng_keys_jit(keys, xs, ys, weights, c, kind, block,
+                                force_interpret):
     n, ell, d = xs.shape
-    keys = jax.random.split(key, n)
     xa = jnp.concatenate([xs, ys[..., None]], axis=-1)  # labels ride along
 
     def one(acc, inp):
@@ -116,6 +132,14 @@ def _encode_fleet_prng_jit(key, xs, ys, weights, c, kind, block,
     acc, _ = jax.lax.scan(one, jnp.zeros((c, d + 1), dtype=xs.dtype),
                           (keys, xa, weights))
     return acc[:, :d], acc[:, d]
+
+
+@partial(jax.jit, static_argnames=("c", "kind", "block", "force_interpret"))
+def _encode_fleet_prng_jit(key, xs, ys, weights, c, kind, block,
+                           force_interpret):
+    keys = jax.random.split(key, xs.shape[0])
+    return _encode_fleet_prng_keys_jit(keys, xs, ys, weights, c, kind,
+                                       block, force_interpret)
 
 
 generator_values = _k.generator_values

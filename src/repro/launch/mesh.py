@@ -62,6 +62,18 @@ def make_lane_mesh(n_lanes: int) -> jax.sharding.Mesh:
     return jax.sharding.Mesh(jax.devices()[:k], ("lanes",))
 
 
+def make_shard_mesh() -> jax.sharding.Mesh:
+    """1-d mesh over ALL local devices for tensor-sharded solves.
+
+    Unlike the lane mesh (whose size adapts to the lane count), the shard
+    mesh always spans every local device: `repro.fleet.solve_fleet`
+    splits one problem's DEVICE axis across it, so more devices means a
+    smaller per-device slab of the `(t_grid, n, L)` expected-return
+    tensor, not more lanes.
+    """
+    return jax.sharding.Mesh(jax.devices(), ("shards",))
+
+
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """The batch-parallel axes of a mesh (includes 'pod' when present)."""
     names = mesh.axis_names

@@ -66,11 +66,37 @@ def expected_return(params: DeviceDelayParams, ell, t) -> np.ndarray:
     return ell * total_cdf_loop(params, ell, t)
 
 
+# The oracle builds a dense (chunk, n) eval stack per load chunk (and the
+# bisection re-solves it ~70 times).  It exists for 24-device parity tests
+# and seed-baseline timings, not fleet-scale planning — cap n explicitly
+# (clear error instead of an OOM kill) and shrink the load chunk so the
+# stack never exceeds _MAX_STACK_ELEMS float64 entries (128 MiB).
+_MAX_ORACLE_N = 16_384
+_MAX_STACK_ELEMS = 2 ** 24
+
+
+def _oracle_chunk(n: int, chunk: int, width: int | None = None) -> int:
+    """Adaptive load-chunk size for the reference grid searches.
+
+    `width` is the per-load row width of the eval stack (defaults to n;
+    the partial-return oracle passes n * chunks for its (n, Q, K)
+    intermediates)."""
+    if n > _MAX_ORACLE_N:
+        raise ValueError(
+            f"reference oracle supports at most {_MAX_ORACLE_N} devices, "
+            f"got {n}: it is a scalar host-side baseline for parity tests, "
+            "not a fleet-scale planner — use repro.plan.solver."
+            "solve_redundancy_batched or repro.fleet.solve_fleet instead")
+    width = n if width is None else width
+    return max(1, min(chunk, _MAX_STACK_ELEMS // max(width, 1)))
+
+
 def optimal_loads_loop(params: DeviceDelayParams, caps: np.ndarray, t: float,
                        chunk: int = 4096) -> tuple[np.ndarray, np.ndarray]:
     """The seed's per-integer-load grid search (one CDF call per load)."""
     caps = np.asarray(caps, dtype=np.int64)
     n = params.n
+    chunk = _oracle_chunk(n, chunk)
     l_max = int(caps.max())
     best_val = np.zeros(n, dtype=np.float64)
     best_ell = np.zeros(n, dtype=np.int64)

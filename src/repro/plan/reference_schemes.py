@@ -20,7 +20,8 @@ import numpy as np
 
 from repro.core.delay_model import (K_MAX, DeviceDelayParams, _nbinom_pmf)
 from repro.core.redundancy import RedundancyPlan
-from repro.plan.reference import optimal_loads_loop, total_cdf_loop
+from repro.plan.reference import (_oracle_chunk, optimal_loads_loop,
+                                  total_cdf_loop)
 
 
 # ---------------------------------------------------------------------------
@@ -80,6 +81,9 @@ def optimal_loads_partial_loop(params: DeviceDelayParams, caps: np.ndarray,
     """Per-integer-load grid search for the partial-return objective."""
     caps = np.asarray(caps, dtype=np.int64)
     n = params.n
+    # the per-load intermediate is (n, Q, K)-shaped, so budget the load
+    # chunk against n * chunks rather than n alone
+    chunk = _oracle_chunk(n, chunk, width=n * max(chunks, 1))
     l_max = int(caps.max())
     best_val = np.zeros(n, dtype=np.float64)
     best_ell = np.zeros(n, dtype=np.int64)

@@ -212,6 +212,19 @@ class LowLatencyCFL:
             dev["x_parity"], dev["y_parity"], beta)
         return g_sys + arrivals["parity_ok"] * g_par
 
+    def tiered_contributions(self, state, dev, beta, arrivals, tier_masks):
+        # chunk-gated systematic partials reduce per edge tier; parity is
+        # server-resident and rides as the server-side term
+        resid = dev["x"] @ beta - dev["y"]
+        done = arrivals["chunks_done"][dev["row_client"]]
+        w = dev["w_sys"] * (dev["row_chunk"] < done).astype(resid.dtype)
+        partials = aggregation.tier_reduce(resid * w, dev["x"], tier_masks)
+        if state.c == 0:
+            return partials, None
+        g_par = aggregation.parity_gradient(
+            dev["x_parity"], dev["y_parity"], beta)
+        return partials, arrivals["parity_ok"] * g_par
+
     def uplink_bits(self, state: LowLatencyState, fleet: "FleetSpec",
                     epochs: int) -> float:
         # Q incremental chunk packets + 1 completion packet per device-epoch

@@ -59,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.strategy import EpochSchedule, TrainData
-from repro.core import encoding
+from repro.core import aggregation, encoding
 from repro.core.delay_model import sample_total
 from repro.core.redundancy import RedundancyPlan, systematic_weights
 
@@ -289,6 +289,20 @@ class StochasticCodedFL:
         g_par = ((resid_par * w_par) @ dev["x_parity"]) \
             / (state.c * self.sample_frac)
         return g_sys + g_par
+
+    def tiered_contributions(self, state, dev, beta, arrivals, tier_masks):
+        # systematic partials reduce per edge tier; the stochastic parity
+        # gradient is server-resident and rides as the server-side term
+        resid = dev["x"] @ beta - dev["y"]
+        w = dev["w_sys"] * arrivals["received"][dev["row_client"]]
+        partials = aggregation.tier_reduce(resid * w, dev["x"], tier_masks)
+        if state.c == 0:
+            return partials, None
+        resid_par = dev["x_parity"] @ beta - dev["y_parity"]
+        w_par = arrivals["parity_mask"] * arrivals["parity_ok"]
+        g_par = ((resid_par * w_par) @ dev["x_parity"]) \
+            / (state.c * self.sample_frac)
+        return partials, g_par
 
     def uplink_bits(self, state: StochasticState, fleet: "FleetSpec",
                     epochs: int) -> float:

@@ -64,23 +64,17 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.api import Session, TraceReport, plan_sweep
-from repro.api.session import (_ENGINE_CACHE, _ENGINE_CACHE_MAX, _bucket_key,
-                               make_epoch_step)
+from repro.api.session import _bucket_key, cache_engine, make_epoch_step
 from repro.api.strategy import EpochSchedule
 from repro.core import aggregation
 
 from .scheduler import ConvergenceCriterion, FifoScheduler, ServeRequest
 
-
-def _cache_engine(key: Hashable, build) -> Any:
-    """Fetch-or-build in the process-wide sweep-engine cache."""
-    engine = _ENGINE_CACHE.get(key)
-    if engine is None:
-        engine = build()
-        while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
-            _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
-        _ENGINE_CACHE[key] = engine
-    return engine
+# Fetch-or-build goes through the sweep engine's shared LRU
+# (`repro.api.session.cache_engine`); lane groups additionally pin their
+# own `step_fn`/`splice` references, so an eviction under REPRO_ENGINE_
+# CACHE_MAX pressure never breaks an in-flight serve bucket.
+_cache_engine = cache_engine
 
 
 @partial(jax.jit, donate_argnums=(0, 1, 2, 3))

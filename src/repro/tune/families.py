@@ -165,10 +165,15 @@ FAMILIES = {f.name: f for f in
             (EncodeFamily(), EncodePrngFamily(), CodedGradFamily())}
 
 # The shapes `python -m repro.tune --ci-defaults` tunes and commits to
-# `defaults.json`: the paper's §IV composite-parity shapes plus the
-# fleet-scale shapes `benchmarks/kernels.py` sweeps in CI.
+# `defaults.json`: the paper's §IV composite-parity shapes, the
+# fleet-scale shapes `benchmarks/kernels.py` sweeps in CI, and the
+# hierarchical-fleet per-tier encode shapes `benchmarks/perf_fleet.py`
+# streams (many clients with tiny per-client shards: small ell/d, so
+# `block="auto"` never cold-misses on the fleet smoke stage).
 CI_SHAPES: dict[str, list[tuple]] = {
-    "encode": [(936, 300, 500), (2048, 512, 512)],
-    "encode_prng": [(936, 300, 500), (2048, 512, 512)],
+    "encode": [(936, 300, 500), (2048, 512, 512),
+               (128, 8, 32), (256, 16, 64)],
+    "encode_prng": [(936, 300, 500), (2048, 512, 512),
+                    (128, 8, 32), (256, 16, 64)],
     "coded_grad": [(936, 500), (8192, 512)],
 }

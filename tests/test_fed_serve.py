@@ -296,3 +296,82 @@ def test_serve_engine_programs_are_cached(small):
     before = len(_ENGINE_CACHE)
     FedServeEngine(data, lane_width=2, chunk=10).serve([sess])
     assert len(_ENGINE_CACHE) == before
+
+
+# ---------------------------------------------------------------------------
+# bounded (LRU) engine cache
+# ---------------------------------------------------------------------------
+
+def test_engine_cache_lru_semantics(monkeypatch):
+    """`cache_engine` is a capped LRU: hits refresh recency, inserts past
+    the cap (env-overridable) evict the least-recently-used entry."""
+    from repro.api.session import _ENGINE_CACHE, cache_engine
+
+    saved = dict(_ENGINE_CACHE)
+    _ENGINE_CACHE.clear()
+    try:
+        monkeypatch.setenv("REPRO_ENGINE_CACHE_MAX", "2")
+        builds = []
+
+        def make(tag):
+            def build():
+                builds.append(tag)
+                return tag
+            return build
+
+        assert cache_engine(("k", 1), make("e1")) == "e1"
+        assert cache_engine(("k", 2), make("e2")) == "e2"
+        # hit: no rebuild, refreshes ("k", 1) to most-recent
+        assert cache_engine(("k", 1), make("e1b")) == "e1"
+        assert builds == ["e1", "e2"]
+        # insert past the cap: evicts ("k", 2), the LRU entry
+        assert cache_engine(("k", 3), make("e3")) == "e3"
+        assert list(_ENGINE_CACHE) == [("k", 1), ("k", 3)]
+        # the evicted key rebuilds
+        assert cache_engine(("k", 2), make("e2b")) == "e2b"
+        assert builds == ["e1", "e2", "e3", "e2b"]
+
+        # a nonsense override falls back to the default cap (>= 1 floor)
+        monkeypatch.setenv("REPRO_ENGINE_CACHE_MAX", "not-a-number")
+        from repro.api.session import engine_cache_max
+        assert engine_cache_max() == 64
+        monkeypatch.setenv("REPRO_ENGINE_CACHE_MAX", "-5")
+        assert engine_cache_max() == 1
+    finally:
+        _ENGINE_CACHE.clear()
+        _ENGINE_CACHE.update(saved)
+
+
+def test_engine_cache_eviction_never_breaks_inflight_buckets(
+        monkeypatch, small):
+    """Regression: with the cache capped at ONE entry, a mixed workload
+    whose buckets evict each other's engines mid-serve must still finish
+    every session with a bit-exact solo-prefix trace — lane groups pin
+    their own step_fn at creation, so eviction only costs rebuilds."""
+    from repro.api.session import _ENGINE_CACHE
+
+    fleet, _, data = small
+    saved = dict(_ENGINE_CACHE)
+    _ENGINE_CACHE.clear()
+    try:
+        monkeypatch.setenv("REPRO_ENGINE_CACHE_MAX", "1")
+        c = int(0.3 * data.m)
+        sessions = [
+            Session(strategy=make_strategy("uncoded"), fleet=fleet,
+                    lr=LR, epochs=EPOCHS, seed=70),
+            Session(strategy=make_strategy("cfl", key_seed=7, fixed_c=c),
+                    fleet=fleet, lr=LR, epochs=EPOCHS, seed=71),
+            Session(strategy=make_strategy("uncoded"), fleet=fleet,
+                    lr=0.03, epochs=EPOCHS, seed=72),
+            Session(strategy=make_strategy("cfl", key_seed=8, fixed_c=c),
+                    fleet=fleet, lr=LR, epochs=EPOCHS, seed=73),
+        ]
+        engine = FedServeEngine(data, lane_width=2, chunk=7)
+        reports = engine.serve(sessions)
+        assert engine.n_groups >= 2      # >= 2 buckets under a 1-entry cap
+        assert len(_ENGINE_CACHE) <= 1   # the cap held throughout
+        for rep, sess in zip(reports, sessions):
+            _assert_prefix_of_solo(rep, sess, data)
+    finally:
+        _ENGINE_CACHE.clear()
+        _ENGINE_CACHE.update(saved)

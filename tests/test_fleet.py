@@ -1,0 +1,417 @@
+"""Tests for the hierarchical fleet layer (`repro.fleet`).
+
+The load-bearing guarantees:
+
+  * tier equivalence — a `HierarchicalCFL` round over a SINGLE all-client
+    tier is bit-for-bit the wrapped strategy's flat round (full-width
+    masked contraction: masking adds exact +-0.0 terms), for all five
+    built-in strategies; a multi-tier partition reassociates ONLY the
+    T-term cross-tier combine, so traces agree to float ulp, never more;
+  * degenerate subsampling — `sample_frac == 1` draws NO extra
+    randomness: the wrapped strategy's generator stream is preserved
+    exactly;
+  * plan parity — `solve_fleet` (sharded + chunk-streamed) reproduces
+    `solve_redundancy_batched`'s loads/c on the paper fleet, with t*
+    within the grid-refinement tolerance (NOT bit-for-bit: aggregate
+    reassociation is a documented invariant);
+  * tiered encode — `encode_fleet_tiered` over one tier is bit-identical
+    to the flat in-kernel-PRNG pass (same key table, same scan order).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Session, TrainData, make_strategy, run_sweep
+from repro.core.delay_model import DeviceDelayParams
+from repro.fleet import (FleetTopology, HierarchicalCFL,
+                         encode_fleet_tiered, sample_tier_rounds,
+                         solve_fleet)
+from repro.kernels.encode import ops as encode_ops
+from repro.plan.solver import PlanRequest, solve_redundancy_batched
+from repro.sim.network import mega_fleet, paper_fleet, wireless_fleet
+
+EPOCHS = 12
+LR = 0.05
+N, ELL, D = 12, 60, 40
+STRATEGIES = ["uncoded", "cfl", "gradcode", "stochastic", "lowlatency"]
+
+
+@pytest.fixture(scope="module")
+def small():
+    fleet = paper_fleet(0.2, 0.2, seed=1, n=N, d=D)
+    wfleet = wireless_fleet(0.2, 0.2, nu_erasure=0.3, seed=0, n=N, d=D)
+    data = TrainData.linreg(jax.random.PRNGKey(0), n=N, ell=ELL, d=D)
+    return fleet, wfleet, data
+
+
+def _base_for(name: str, data, epochs: int = EPOCHS):
+    """One base strategy per scheme + which fleet it trains on."""
+    c = int(0.3 * data.m)
+    if name == "uncoded":
+        return make_strategy("uncoded"), "paper"
+    if name == "cfl":
+        return make_strategy("cfl", key_seed=7, fixed_c=c), "paper"
+    if name == "gradcode":
+        return make_strategy("gradcode", r=3), "paper"
+    if name == "stochastic":
+        return make_strategy("stochastic", key_seed=7, fixed_c=c,
+                             noise_multiplier=0.5, sample_frac=0.8,
+                             rounds=epochs), "wireless"
+    if name == "lowlatency":
+        return make_strategy("lowlatency", key_seed=7, fixed_c=c,
+                             chunks=4), "wireless"
+    raise ValueError(name)
+
+
+def _run_pair(name, small, topology):
+    """(base report, hierarchical report) on identical data/fleet/seed."""
+    fleet, wfleet, data = small
+    base, which = _base_for(name, data)
+    flt = fleet if which == "paper" else wfleet
+    solo = Session(strategy=base, fleet=flt, lr=LR, epochs=EPOCHS,
+                   seed=3).run(data, rng=np.random.default_rng(3))
+    hier = make_strategy("hierarchical", base=base, topology=topology)
+    rep = Session(strategy=hier, fleet=flt, lr=LR, epochs=EPOCHS,
+                  seed=3).run(data, rng=np.random.default_rng(3))
+    return solo, rep
+
+
+# ---------------------------------------------------------------------------
+# tier equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_single_tier_is_bit_exact(name, small):
+    """One all-client tier: the hierarchy is the flat round bit-for-bit
+    (mask of ones multiplies exactly, the 1-term combine is identity)."""
+    solo, rep = _run_pair(name, small, FleetTopology.uniform(N, 1))
+    np.testing.assert_array_equal(rep.nmse, solo.nmse)
+    np.testing.assert_array_equal(rep.times, solo.times)
+    np.testing.assert_array_equal(rep.epoch_durations,
+                                  solo.epoch_durations)
+    assert rep.label == f"hier[{solo.label}]"
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_permuted_tiers_match_to_ulp(name, small):
+    """A permuted 3-tier partition reassociates only the cross-tier sum:
+    traces track the flat run to float tolerance across training."""
+    rng = np.random.default_rng(11)
+    tier_of = rng.permutation(np.arange(N) % 3)
+    topo = FleetTopology.from_assignment(tier_of)
+    solo, rep = _run_pair(name, small, topo)
+    np.testing.assert_allclose(rep.nmse, solo.nmse, rtol=1e-3, atol=1e-6)
+    # durations never touch the gradient path: identical draws, identical
+    # clocks
+    np.testing.assert_array_equal(rep.epoch_durations,
+                                  solo.epoch_durations)
+
+
+def test_full_participation_preserves_generator_stream(small):
+    """sample_frac == 1 everywhere: NO gate draws — the wrapped
+    strategy's stream (and the caller's rng position) is untouched."""
+    fleet, _, data = small
+    base, _ = _base_for("cfl", data)
+    hier = make_strategy("hierarchical", base=base,
+                         topology=FleetTopology.uniform(N, 3))
+    state = hier.plan(fleet, data)
+
+    rng_h, rng_b = np.random.default_rng(5), np.random.default_rng(5)
+    sched_h = hier.sample_epochs(state, fleet, EPOCHS, rng_h)
+    sched_b = base.sample_epochs(state.base, fleet, EPOCHS, rng_b)
+    for key, val in sched_b.arrivals.items():
+        np.testing.assert_array_equal(sched_h.arrivals[key], val)
+    np.testing.assert_array_equal(sched_h.arrivals["tier_gate"],
+                                  np.ones((EPOCHS, N), dtype=np.float32))
+    assert rng_h.standard_normal() == rng_b.standard_normal()
+
+
+def test_subsampled_gates_are_unbiased_and_training_converges(small):
+    fleet, _, data = small
+    topo = FleetTopology.uniform(N, 3, sample_frac=0.5)
+    gates = topo.sample_gates(4000, np.random.default_rng(0))
+    assert gates.shape == (4000, N)
+    # gate in {0, 1/frac}: E[gate] == 1 per client
+    np.testing.assert_allclose(gates.mean(axis=0), 1.0, atol=0.06)
+
+    base, _ = _base_for("cfl", data)
+    hier = make_strategy("hierarchical", base=base, topology=topo)
+    rep = Session(strategy=hier, fleet=fleet, lr=LR, epochs=30,
+                  seed=1).run(data, rng=np.random.default_rng(1))
+    assert rep.nmse[-1] < 0.5 * rep.nmse[0]
+    assert rep.extras["n_tiers"] == 3
+    assert rep.extras["expected_participants"] == pytest.approx(N * 0.5)
+
+
+def test_hierarchical_runs_through_run_sweep(small):
+    """Sweep lanes over the wrapper equal fresh solo runs bit-for-bit
+    (the run_sweep contract, now including the stacked gate tensor)."""
+    fleet, _, data = small
+    topo = FleetTopology.uniform(N, 3, sample_frac=0.8)
+    sessions = [
+        Session(strategy=make_strategy(
+            "hierarchical",
+            base=make_strategy("cfl", key_seed=7,
+                               fixed_c=int(0.3 * data.m)),
+            topology=topo), fleet=fleet, lr=lr, epochs=EPOCHS, seed=s)
+        for s, lr in ((0, 0.05), (1, 0.03))]
+    reports = run_sweep(sessions, data)
+    for sess, rep in zip(sessions, reports):
+        solo = sess.run(data, rng=np.random.default_rng(sess.seed))
+        np.testing.assert_array_equal(rep.nmse, solo.nmse)
+        np.testing.assert_array_equal(rep.epoch_durations,
+                                      solo.epoch_durations)
+
+
+def test_engine_keys_separate_topologies(small):
+    fleet, _, data = small
+    base, _ = _base_for("cfl", data)
+    h2 = HierarchicalCFL(base=base, topology=FleetTopology.uniform(N, 2))
+    h3 = HierarchicalCFL(base=base, topology=FleetTopology.uniform(N, 3))
+    k2 = h2.engine_key(h2.plan(fleet, data))
+    k3 = h3.engine_key(h3.plan(fleet, data))
+    assert k2 != k3
+    # participation values gate operands only — same compiled engine
+    h3f = HierarchicalCFL(
+        base=base, topology=FleetTopology.uniform(N, 3, sample_frac=0.5))
+    assert h3f.engine_key(h3f.plan(fleet, data)) == k3
+
+
+# ---------------------------------------------------------------------------
+# topology + registry
+# ---------------------------------------------------------------------------
+
+def test_topology_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        FleetTopology(tier_of=np.array([], dtype=np.int32),
+                      sample_frac=np.array([1.0]))
+    with pytest.raises(ValueError, match="dense"):
+        FleetTopology(tier_of=np.array([0, 2]),
+                      sample_frac=np.array([1.0, 1.0]))
+    with pytest.raises(ValueError, match="empty tiers"):
+        FleetTopology(tier_of=np.array([0, 0, 2, 2]),
+                      sample_frac=np.array([1.0, 1.0, 1.0]))
+    with pytest.raises(ValueError, match="sample_frac"):
+        FleetTopology.uniform(4, 2, sample_frac=0.0)
+    with pytest.raises(ValueError, match="n_tiers"):
+        FleetTopology.uniform(4, 5)
+    with pytest.raises(ValueError, match="budget"):
+        FleetTopology.uniform(4, 2).with_round_budget(0)
+
+    topo = FleetTopology.uniform(10, 3)
+    assert topo.n == 10 and topo.n_tiers == 3 and not topo.subsampled
+    members = topo.tier_members()
+    assert sorted(np.concatenate(members).tolist()) == list(range(10))
+    assert all(np.all(np.diff(m) > 0) for m in members)
+    capped = topo.with_round_budget(5)
+    np.testing.assert_allclose(capped.sample_frac, 0.5)
+    assert capped.subsampled and capped.structure_key() == (10, 3)
+
+
+def test_registry_constructs_hierarchical(small):
+    _, _, data = small
+    topo = FleetTopology.uniform(N, 3)
+    for name in ("hierarchical", "hier", "fleet"):
+        strat = make_strategy(name, base=make_strategy("uncoded"),
+                              topology=topo)
+        assert isinstance(strat, HierarchicalCFL)
+        assert strat.label.startswith("hier[")
+
+    class NoHook:
+        label = "nohook"
+
+    with pytest.raises(TypeError, match="tiered_contributions"):
+        make_strategy("hierarchical", base=NoHook(), topology=topo)
+    with pytest.raises(TypeError, match="FleetTopology"):
+        make_strategy("hierarchical", base=make_strategy("uncoded"),
+                      topology="3 tiers please")
+
+
+def test_topology_fleet_size_mismatch(small):
+    fleet, _, data = small
+    hier = make_strategy("hierarchical", base=make_strategy("uncoded"),
+                         topology=FleetTopology.uniform(N + 1, 2))
+    with pytest.raises(ValueError, match="topology covers"):
+        hier.plan(fleet, data)
+
+
+# ---------------------------------------------------------------------------
+# sharded fleet planning
+# ---------------------------------------------------------------------------
+
+def _paper_request(**kw):
+    fleet = paper_fleet(0.2, 0.2, seed=0, n=24, d=40)
+    rng = np.random.default_rng(2)
+    data_sizes = rng.integers(40, 81, size=24)
+    return PlanRequest(edge=fleet.edge, server=fleet.server,
+                       data_sizes=data_sizes, **kw)
+
+
+def test_solve_fleet_matches_batched_solver():
+    req = _paper_request(c_up=400)
+    batched = solve_redundancy_batched([req], eps_rel=1e-6)[0]
+    sharded = solve_fleet(req, eps_rel=1e-6)
+    np.testing.assert_array_equal(sharded.loads, batched.loads)
+    assert sharded.c == batched.c
+    assert sharded.t_star == pytest.approx(batched.t_star, rel=1e-4)
+    np.testing.assert_allclose(sharded.p_return, batched.p_return,
+                               rtol=1e-6, atol=1e-9)
+    assert sharded.expected_agg >= req.m * (1.0 - 1e-9)
+
+
+def test_solve_fleet_weighted_partial_objectives():
+    """srv_weight + edge_chunks flow through the sharded evaluator."""
+    req = _paper_request(srv_weight=0.5, edge_chunks=4, fixed_c=64)
+    batched = solve_redundancy_batched([req], eps_rel=1e-6)[0]
+    sharded = solve_fleet(req, eps_rel=1e-6)
+    np.testing.assert_array_equal(sharded.loads, batched.loads)
+    assert sharded.c == batched.c == 64
+    assert sharded.t_star == pytest.approx(batched.t_star, rel=1e-4)
+
+
+def test_solve_fleet_scales_past_the_oracle_ceiling():
+    """A fleet far beyond the reference oracle's n ceiling plans fine
+    (chunk-streamed), and the plan respects every device cap."""
+    fleet = mega_fleet(20_000, d=16, seed=0)
+    rng = np.random.default_rng(1)
+    data_sizes = rng.integers(2, 9, size=20_000)
+    req = PlanRequest(edge=fleet.edge, server=fleet.server,
+                      data_sizes=data_sizes, c_up=256)
+    plan = solve_fleet(req, eps_rel=1e-2)
+    assert plan.loads.shape == (20_000,)
+    assert np.all(plan.loads <= data_sizes)
+    assert plan.expected_agg >= req.m * (1.0 - 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# reference-oracle guards
+# ---------------------------------------------------------------------------
+
+def test_reference_oracle_rejects_fleet_scale():
+    from repro.plan.reference import (_MAX_ORACLE_N, _oracle_chunk,
+                                      optimal_loads_loop)
+    n = _MAX_ORACLE_N + 1
+    params = DeviceDelayParams(a=np.ones(n), mu=np.ones(n),
+                               tau=np.zeros(n), p=np.zeros(n))
+    with pytest.raises(ValueError, match="solve_fleet"):
+        optimal_loads_loop(params, np.full(n, 4), t=1.0)
+    # the adaptive chunk keeps the (chunk, width) stack bounded
+    assert _oracle_chunk(16, 4096) == 4096
+    assert _oracle_chunk(4096, 4096, width=2 ** 22) == 4
+    assert _oracle_chunk(4096, 4096, width=2 ** 26) == 1
+
+
+def test_reference_oracle_chunking_is_equivalent():
+    """Chunk boundaries never change the argmax (guard regression)."""
+    from repro.plan.reference import optimal_loads_loop
+    fleet = paper_fleet(0.2, 0.2, seed=3, n=6, d=20)
+    caps = np.array([5, 9, 13, 7, 11, 8])
+    t = float(np.max(fleet.edge.mean_total(caps)))
+    loads_a, vals_a = optimal_loads_loop(fleet.edge, caps, t, chunk=3)
+    loads_b, vals_b = optimal_loads_loop(fleet.edge, caps, t, chunk=4096)
+    np.testing.assert_array_equal(loads_a, loads_b)
+    np.testing.assert_array_equal(vals_a, vals_b)
+
+
+def test_partial_reference_oracle_guard():
+    from repro.plan.reference import _MAX_ORACLE_N
+    from repro.plan.reference_schemes import optimal_loads_partial_loop
+    n = _MAX_ORACLE_N + 1
+    params = DeviceDelayParams(a=np.ones(n), mu=np.ones(n),
+                               tau=np.zeros(n), p=np.zeros(n))
+    with pytest.raises(ValueError, match="solve_fleet"):
+        optimal_loads_partial_loop(params, np.full(n, 4), 1.0, chunks=4)
+
+
+# ---------------------------------------------------------------------------
+# tiered streamed encoding
+# ---------------------------------------------------------------------------
+
+def _encode_problem(n=6, ell=5, d=8):
+    key = jax.random.PRNGKey(9)
+    kx, ky, kw, kf = jax.random.split(key, 4)
+    xs = jax.random.normal(kx, (n, ell, d))
+    ys = jax.random.normal(ky, (n, ell))
+    weights = jax.random.uniform(kw, (n, ell), minval=0.5, maxval=1.5)
+    return kf, xs, ys, weights
+
+
+def test_encode_tiered_single_tier_is_bit_identical():
+    kf, xs, ys, weights = _encode_problem()
+    c = 4
+    x_flat, y_flat = encode_ops.encode_fleet_prng(kf, xs, ys, weights, c)
+    x_t, y_t = encode_fleet_tiered(kf, xs, ys, weights, c,
+                                   FleetTopology.uniform(6, 1))
+    np.testing.assert_array_equal(np.asarray(x_t), np.asarray(x_flat))
+    np.testing.assert_array_equal(np.asarray(y_t), np.asarray(y_flat))
+
+
+def test_encode_tiered_partition_matches_to_ulp():
+    kf, xs, ys, weights = _encode_problem()
+    c = 4
+    x_flat, y_flat = encode_ops.encode_fleet_prng(kf, xs, ys, weights, c)
+    topo = FleetTopology.from_assignment(np.array([2, 0, 1, 0, 2, 1]))
+    x_t, y_t = encode_fleet_tiered(kf, xs, ys, weights, c, topo)
+    np.testing.assert_allclose(np.asarray(x_t), np.asarray(x_flat),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_flat),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_encode_tiered_validates_fleet_size():
+    kf, xs, ys, weights = _encode_problem()
+    with pytest.raises(ValueError, match="topology covers"):
+        encode_fleet_tiered(kf, xs, ys, weights, 4,
+                            FleetTopology.uniform(7, 2))
+
+
+# ---------------------------------------------------------------------------
+# fleet generation + O(participants) round scheduling
+# ---------------------------------------------------------------------------
+
+def test_mega_fleet_stays_finite():
+    """The tiled ladder never underflows — every device keeps a positive,
+    finite rate at sizes where the raw §IV ladder is denormal."""
+    fleet = mega_fleet(5000, d=16, seed=0)
+    for vec in (fleet.edge.a, fleet.edge.mu, fleet.edge.tau):
+        assert np.all(np.isfinite(vec)) and np.all(vec > 0)
+    # bounded heterogeneity: the ladder spans at most the §IV 24 rungs
+    spread = fleet.edge.a.max() / fleet.edge.a.min()
+    assert spread <= (1.0 / 0.8) ** 23 * 1.0001
+    with pytest.raises(TypeError, match="unexpected"):
+        mega_fleet(100, nonsense_knob=3)
+
+
+def test_sample_tier_rounds_budget_and_shapes():
+    n, budget, epochs = 3000, 100, 6
+    fleet = mega_fleet(n, d=16, seed=0)
+    topo = FleetTopology.uniform(n, 8).with_round_budget(budget)
+    rng = np.random.default_rng(4)
+    stats = sample_tier_rounds(topo, fleet.edge, np.full(n, 5), epochs,
+                               rng)
+    assert stats.durations.shape == (epochs,)
+    assert stats.tier_max.shape == (epochs, 8)
+    assert stats.participants.shape == (epochs, 8)
+    assert np.all(stats.durations >= stats.tier_max.max(axis=1) - 1e-12)
+    # expected participants per epoch == budget; allow generous slack
+    per_epoch = stats.participants.sum(axis=1)
+    assert 0.3 * budget < per_epoch.mean() < 3 * budget
+
+
+def test_sample_tier_rounds_full_participation_and_validation():
+    n = 30
+    fleet = mega_fleet(n, d=16, seed=1)
+    topo = FleetTopology.uniform(n, 3)
+    stats = sample_tier_rounds(topo, fleet.edge, np.full(n, 4), 3,
+                               np.random.default_rng(0))
+    np.testing.assert_array_equal(stats.participants,
+                                  np.full((3, 3), 10))
+    assert np.all(stats.durations > 0)
+
+    with pytest.raises(ValueError, match="loads"):
+        sample_tier_rounds(topo, fleet.edge, np.full(n + 1, 4), 3,
+                           np.random.default_rng(0))
+    other = mega_fleet(n + 1, d=16, seed=1)
+    with pytest.raises(ValueError, match="edge params"):
+        sample_tier_rounds(topo, other.edge, np.full(n, 4), 3,
+                           np.random.default_rng(0))
