@@ -48,7 +48,7 @@ import sys
 LOWER_BETTER = ("_us", "us_per_call", "_s", "time", "latency", "nmse",
                 "bytes", "budget", "growth")
 HIGHER_BETTER = ("speedup", "ratio", "_x", "per_sec", "throughput",
-                 "sessions_per", "epochs_per")
+                 "sessions_per", "epochs_per", "accuracy")
 
 
 def _matches(low: str, pat: str) -> bool:

@@ -18,8 +18,8 @@ def main(argv=None) -> int:
                     help="reduced epoch counts (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig3,fig4,fig5,"
-                         "schemes,privacy,ablation,noniid,serve,fleet,"
-                         "kernels,roofline")
+                         "schemes,nonlinear,privacy,ablation,noniid,serve,"
+                         "fleet,kernels,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -46,6 +46,9 @@ def main(argv=None) -> int:
         # 600 epochs in both modes: the monotone-convergence gates need the
         # slow-deadline (low-delta) runs to actually reach the target
         fig_schemes.main(epochs=600)
+    if want("nonlinear"):
+        from . import fig_nonlinear
+        fig_nonlinear.main(epochs=300 if args.fast else 600)
     if want("privacy"):
         from . import fig_privacy
         fig_privacy.main(epochs=200 if args.fast else 400)

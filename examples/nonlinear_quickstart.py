@@ -1,0 +1,86 @@
+"""Non-linear quickstart: CodedFedL kernel classification end-to-end.
+
+Builds a small multi-access-edge fleet, generates a classification
+problem whose decision regions are genuinely non-linear (an RBF-network
+teacher), maps it through CodedFedL's shared random-Fourier-feature map,
+solves the MEC load allocation, and trains the coded one-vs-rest head —
+then shows the head beating the best possible linear model on held-out
+data.
+
+    PYTHONPATH=src python examples/nonlinear_quickstart.py [--epochs 300]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import Session, TrainData, make_strategy
+from repro.data import classification_dataset, one_vs_rest_targets
+from repro.sim.network import wireless_fleet
+
+N, ELL, ELL_TEST, D_RAW, D_FEAT = 12, 100, 50, 6, 256
+TEACHER_GAMMA = 2.0
+LR = 0.5
+
+
+def main(epochs: int = 300):
+    print("=== CodedFedL non-linear quickstart ===")
+    fleet = wireless_fleet(0.3, 0.3, nu_erasure=0.3, seed=0, n=N, d=D_FEAT)
+
+    # non-linear classification data, split train / held-out per client
+    xs, labels = classification_dataset(
+        jax.random.PRNGKey(2), N, ELL + ELL_TEST, D_RAW,
+        n_classes=2, centers=32, gamma=TEACHER_GAMMA)
+    ys = one_vs_rest_targets(labels, 1)          # ±1 one-vs-rest targets
+    xs_tr, xs_te = xs[:, :ELL], xs[:, ELL:]
+    y_tr, y_te = ys[:, :ELL], np.asarray(ys[:, ELL:]).reshape(-1)
+
+    # the sixth strategy: RFF kernel regression through the coded linear
+    # machinery, planned under the MEC shifted-exponential delay model
+    strategy = make_strategy("codedfedl", key_seed=7, d_feat=D_FEAT,
+                             rff_gamma=TEACHER_GAMMA / D_RAW,
+                             fixed_c=int(0.3 * N * ELL))
+
+    # feature-space reference head (what the NMSE trace measures against)
+    dummy = TrainData(xs=xs_tr, ys=y_tr, beta_true=jnp.zeros(D_FEAT))
+    phi_tr = np.asarray(strategy.features(dummy),
+                        np.float64).reshape(-1, D_FEAT)
+    beta_ref, *_ = np.linalg.lstsq(
+        phi_tr, np.asarray(y_tr, np.float64).reshape(-1), rcond=None)
+    data = TrainData(xs=xs_tr, ys=y_tr,
+                     beta_true=jnp.asarray(beta_ref, jnp.float32))
+
+    state = strategy.plan(fleet, data)
+    print(f"plan: c={state.plan.c} t*={state.plan.t_star:.2f}s "
+          f"(MEC delay model, d_feat={D_FEAT})")
+
+    report = Session(strategy=strategy, fleet=fleet, lr=LR,
+                     epochs=epochs).run(data, rng=np.random.default_rng(0))
+
+    # held-out accuracy of the trained head vs the best linear model
+    phi_te = np.asarray(
+        strategy.features(TrainData(xs=xs_te, ys=ys[:, ELL:],
+                                    beta_true=jnp.zeros(D_FEAT))),
+        np.float64).reshape(-1, D_FEAT)
+    acc = np.mean((phi_te @ np.asarray(report.beta, np.float64) > 0)
+                  == (y_te > 0))
+    Xtr = np.asarray(xs_tr, np.float64).reshape(-1, D_RAW)
+    Xte = np.asarray(xs_te, np.float64).reshape(-1, D_RAW)
+    b_lin, *_ = np.linalg.lstsq(
+        np.c_[Xtr, np.ones(len(Xtr))],
+        np.asarray(y_tr, np.float64).reshape(-1), rcond=None)
+    acc_lin = np.mean((np.c_[Xte, np.ones(len(Xte))] @ b_lin > 0)
+                      == (y_te > 0))
+
+    print(f"\ncoded kernel head: NMSE {report.final_nmse():.3f} to the "
+          f"kernel regressor after {report.times[-1]:.0f}s simulated")
+    print(f"held-out accuracy: kernel {acc:.3f} vs best-linear "
+          f"{acc_lin:.3f}")
+    assert acc > acc_lin, "kernel head should beat the linear ceiling"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=300)
+    main(**vars(ap.parse_args()))

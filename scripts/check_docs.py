@@ -1,0 +1,157 @@
+"""Executable-docs gate: every fenced python block in API.md and every
+script in examples/ must actually run.
+
+Docs rot silently — an API rename leaves the prose compiling in the
+reader's head and crashing in their shell.  This gate extracts each
+fenced ```python block from the documentation, writes it to a temp file,
+and executes it in a fresh subprocess with PYTHONPATH=src from the repo
+root; examples run the same way with per-file CI-budget arguments.
+
+A block is SKIPPED (reported, never executed) when either:
+
+  * its info string carries the ``no-run`` marker (```python no-run), or
+  * it contains a ``...`` placeholder — the doc idiom for "elided";
+    such blocks are illustrative shapes, not programs.
+
+Usage:
+    python scripts/check_docs.py [--timeout 600] [--only api|examples]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ("API.md",)
+
+# Per-file CI-budget arguments.  Entries missing from this table run with
+# no arguments (and are flagged, so new examples get a deliberate entry).
+EXAMPLE_ARGS: dict[str, list[str]] = {
+    "quickstart.py": ["--epochs", "30"],
+    "nonlinear_quickstart.py": ["--epochs", "60"],
+    "coded_head_probe.py": [],
+    # model-scale examples at their smallest runnable settings (~40s/~20s)
+    "train_lm.py": ["--steps", "2", "--batch", "2", "--seq", "64"],
+    "serve_decode.py": [],
+}
+
+_FENCE = re.compile(
+    r"^```python([^\n]*)\n(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
+
+
+def extract_blocks(text: str) -> list[tuple[int, str, str]]:
+    """(line number, info string, code) for every fenced python block."""
+    out = []
+    for m in _FENCE.finditer(text):
+        line = text.count("\n", 0, m.start()) + 1
+        out.append((line, m.group(1).strip(), m.group(2)))
+    return out
+
+
+def should_skip(info: str, code: str) -> str | None:
+    """Reason string if the block is non-executable by contract."""
+    if "no-run" in info:
+        return "no-run marker"
+    if "..." in code:
+        return "contains ... placeholder"
+    return None
+
+
+def _run(cmd: list[str], timeout: float) -> tuple[bool, float, str]:
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.perf_counter()
+    try:
+        proc = subprocess.run(cmd, cwd=REPO, env=env, timeout=timeout,
+                              capture_output=True, text=True)
+    except subprocess.TimeoutExpired:
+        return False, time.perf_counter() - t0, f"TIMEOUT after {timeout}s"
+    dt = time.perf_counter() - t0
+    if proc.returncode != 0:
+        tail = "\n".join((proc.stderr or proc.stdout).splitlines()[-15:])
+        return False, dt, tail
+    return True, dt, ""
+
+
+def check_doc_blocks(timeout: float) -> list[str]:
+    failures: list[str] = []
+    for doc in DOC_FILES:
+        path = os.path.join(REPO, doc)
+        with open(path) as fh:
+            blocks = extract_blocks(fh.read())
+        if not blocks:
+            failures.append(f"{doc}: no fenced python blocks found "
+                            f"(extraction broken or docs gutted?)")
+            continue
+        for line, info, code in blocks:
+            name = f"{doc}:{line}"
+            reason = should_skip(info, code)
+            if reason:
+                print(f"  SKIP {name} ({reason})")
+                continue
+            with tempfile.NamedTemporaryFile(
+                    "w", suffix=".py", delete=False) as tf:
+                tf.write(code)
+                tmp = tf.name
+            try:
+                ok, dt, err = _run([sys.executable, tmp], timeout)
+            finally:
+                os.unlink(tmp)
+            print(f"  {'PASS' if ok else 'FAIL'} {name} ({dt:.1f}s)")
+            if not ok:
+                failures.append(f"{name}:\n{err}")
+    return failures
+
+
+def check_examples(timeout: float) -> list[str]:
+    failures: list[str] = []
+    ex_dir = os.path.join(REPO, "examples")
+    for fname in sorted(os.listdir(ex_dir)):
+        if not fname.endswith(".py"):
+            continue
+        args = EXAMPLE_ARGS.get(fname)
+        if args is None:
+            print(f"  NOTE examples/{fname} missing from EXAMPLE_ARGS — "
+                  f"running with no arguments; add a deliberate entry")
+            args = []
+        ok, dt, err = _run(
+            [sys.executable, os.path.join("examples", fname), *args],
+            timeout)
+        print(f"  {'PASS' if ok else 'FAIL'} examples/{fname} ({dt:.1f}s)")
+        if not ok:
+            failures.append(f"examples/{fname}:\n{err}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python scripts/check_docs.py")
+    ap.add_argument("--timeout", type=float, default=600.0,
+                    help="per-block/per-example wall budget (s)")
+    ap.add_argument("--only", choices=("api", "examples"), default=None)
+    args = ap.parse_args(argv)
+
+    failures: list[str] = []
+    if args.only in (None, "api"):
+        print("== fenced python blocks ==")
+        failures += check_doc_blocks(args.timeout)
+    if args.only in (None, "examples"):
+        print("== examples/ ==")
+        failures += check_examples(args.timeout)
+
+    if failures:
+        print(f"\ndocs-check FAILED — {len(failures)} item(s):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"\n--- {f}", file=sys.stderr)
+        return 1
+    print("\ndocs-check OK: every executable doc block and example runs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

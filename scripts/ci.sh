@@ -14,9 +14,15 @@
 #                  ruff is absent — the GitHub workflow always installs
 #                  it)
 #   tests          tier-1 pytest (the ROADMAP verify command)
-#   quickstart     examples/quickstart.py --epochs 30 smoke
+#   docs-check     executable-docs gate: every fenced python block in
+#                  API.md and every examples/*.py runs (CI-budget args
+#                  per file; scripts/check_docs.py) — subsumes the old
+#                  quickstart smoke
 #   perf-smoke     planner-latency budget gate  -> BENCH_perf.json
 #   schemes-smoke  scheme sanity + plan budget  -> BENCH_schemes.json
+#   nonlinear-smoke CodedFedL kernel head beats the equal-wall-clock
+#                  uncoded run and the best linear model
+#                                               -> BENCH_nonlinear.json
 #   privacy-smoke  DP calibration + frontier    -> BENCH_privacy.json
 #   sweep-smoke    batched sweep engine >= 3x   -> BENCH_sweep.json
 #   serve-smoke    serving engine >= 2x sess/s  -> BENCH_serve.json
@@ -105,9 +111,10 @@ run_stage lint lint
 run_stage tests python -m pytest -x -q
 
 if [[ "$TIER" != "fast" ]]; then
-    run_stage quickstart python examples/quickstart.py --epochs 30
+    run_stage docs-check python scripts/check_docs.py
     run_stage perf-smoke python -m benchmarks.perf_session --smoke
     run_stage schemes-smoke python -m benchmarks.fig_schemes --smoke
+    run_stage nonlinear-smoke python -m benchmarks.fig_nonlinear --smoke
     run_stage privacy-smoke python -m benchmarks.fig_privacy --smoke
     run_stage sweep-smoke python -m benchmarks.perf_sweep --smoke
     run_stage serve-smoke python -m benchmarks.perf_serve --smoke

@@ -6,8 +6,8 @@ knows where every scheme lives — including the `repro.schemes` subsystem,
 which is imported lazily so `repro.api` stays import-light.
 
 Names: uncoded, cfl, gradcode, stochastic (alias scfl), lowlatency (alias
-lowlat), hierarchical (aliases hier, fleet — pass base= and topology=, see
-`repro.fleet`).  Extra keyword arguments pass straight through to the strategy
+lowlat), codedfedl (alias cfedl), hierarchical (aliases hier, fleet — pass
+base= and topology=, see `repro.fleet`).  Extra keyword arguments pass straight through to the strategy
 dataclass; for key-carrying schemes, `key_seed=<int>` is accepted as a
 convenience and turned into `key=jax.random.PRNGKey(key_seed)`.
 
@@ -26,9 +26,11 @@ _BUILTINS: Dict[str, Tuple[str, str]] = {
     "gradcode": ("repro.api.strategy", "GradientCodingFL"),
     "stochastic": ("repro.schemes", "StochasticCodedFL"),
     "lowlatency": ("repro.schemes", "LowLatencyCFL"),
+    "codedfedl": ("repro.schemes", "CodedFedL"),
     "hierarchical": ("repro.fleet", "HierarchicalCFL"),
 }
 _ALIASES: Dict[str, str] = {"scfl": "stochastic", "lowlat": "lowlatency",
+                            "cfedl": "codedfedl",
                             "hier": "hierarchical", "fleet": "hierarchical"}
 _CUSTOM: Dict[str, Type] = {}
 

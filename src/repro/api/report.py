@@ -12,7 +12,7 @@ be used from any layer without creating import cycles.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import numpy as np
 
@@ -30,6 +30,9 @@ class TraceReport:
     extras:          strategy-specific scalar knobs/diagnostics surfaced by
                      the optional `Strategy.report_extras(state)` hook
                      (e.g. StochasticCodedFL's noise_multiplier)
+    beta:            final model iterate (model_dim,), or None for engines
+                     predating the harvest — lets classification workloads
+                     evaluate the trained model instead of only its NMSE
     """
 
     times: np.ndarray
@@ -39,6 +42,7 @@ class TraceReport:
     setup_time: float = 0.0
     uplink_bits_total: float = 0.0
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    beta: Optional[np.ndarray] = None
 
     def final_nmse(self) -> float:
         return float(self.nmse[-1])

@@ -154,7 +154,7 @@ def _bucket_key(strategy: Strategy, state: Any, data: TrainData,
     """Sessions with equal keys run as lanes of one compiled engine."""
     return (_static_strategy_key(strategy),
             strategy.engine_key(state),
-            data.m, data.d, str(data.xs.dtype),
+            data.m, data.d, data.model_dim, str(data.xs.dtype),
             _tree_shape_key(dev), _tree_shape_key(arrivals))
 
 
@@ -201,7 +201,7 @@ def _build_engine(strategy: Strategy, state: Any, data: TrainData,
     from repro.launch.mesh import make_lane_mesh
     from repro.launch.sharding import lane_specs
 
-    d, dtype = data.d, data.xs.dtype
+    d, dtype = data.model_dim, data.xs.dtype
     n_lanes = jax.tree.leaves(args)[0].shape[0]
     mesh = make_lane_mesh(n_lanes)
     epoch_step = make_epoch_step(strategy, state, data.m)
@@ -219,9 +219,9 @@ def _build_engine(strategy: Strategy, state: Any, data: TrainData,
             def step(beta, arr_t):
                 return epoch_step(beta, dev, lr, beta_true, arr_t)
 
-            _, trace = jax.lax.scan(step, beta0, arr)
+            beta_f, trace = jax.lax.scan(step, beta0, arr)
             nmse0 = aggregation.nmse(beta0, beta_true)
-            return jnp.concatenate([nmse0[None], trace])
+            return jnp.concatenate([nmse0[None], trace]), beta_f
 
         return jax.lax.map(lane, lane_args)
 
@@ -229,18 +229,18 @@ def _build_engine(strategy: Strategy, state: Any, data: TrainData,
     fn = shard_map(lanes, mesh=mesh,
                    in_specs=(replicated,) + tuple(
                        lane_specs(a) for a in args),
-                   out_specs=P("lanes"))
+                   out_specs=(P("lanes"), P("lanes")))
     return jax.jit(fn)
 
 
 def _execute_lanes(entries: Sequence[tuple],
-                   data: TrainData) -> List[np.ndarray]:
+                   data: TrainData) -> List[tuple]:
     """Run every (session, state, schedule) lane through the batched core.
 
     Lanes are grouped into shape buckets; each bucket stacks its operands,
     fetches (or compiles) its engine from the module cache and executes
-    all its lanes in one sharded call.  Returns each lane's (epochs+1,)
-    NMSE trace, in order.
+    all its lanes in one sharded call.  Returns each lane's
+    ((epochs+1,) NMSE trace, (model_dim,) final beta), in order.
     """
     devs: List[Dict[str, jax.Array]] = []
     arrs: List[Dict[str, np.ndarray]] = []
@@ -254,7 +254,7 @@ def _execute_lanes(entries: Sequence[tuple],
         buckets.setdefault(key, []).append(i)
 
     dtype = data.xs.dtype
-    traces: List[Optional[np.ndarray]] = [None] * len(entries)
+    results: List[Optional[tuple]] = [None] * len(entries)
     for key, idxs in buckets.items():
         b = len(idxs)
         sess0, state0, _ = entries[idxs[0]]
@@ -278,17 +278,19 @@ def _execute_lanes(entries: Sequence[tuple],
             engine_key,
             lambda: _build_engine(sess0.strategy, state0, data, shared,
                                   args))
-        out = np.asarray(engine(shared, *args))
+        out_trace, out_beta = engine(shared, *args)
+        out_trace, out_beta = np.asarray(out_trace), np.asarray(out_beta)
         for j, i in enumerate(idxs):
-            traces[i] = out[j]
+            results[i] = (out_trace[j], out_beta[j])
             # per-session mirror: introspection + lifetime of the session
             entries[i][0]._engines[engine_key] = engine
-    return traces  # type: ignore[return-value]
+    return results  # type: ignore[return-value]
 
 
 def _lane_report(session: "Session", state: Any, sched: EpochSchedule,
                  nmse_trace: np.ndarray,
-                 label: Optional[str] = None) -> TraceReport:
+                 label: Optional[str] = None,
+                 beta: Optional[np.ndarray] = None) -> TraceReport:
     """Assemble the TraceReport for one lane — ONE code path for solo runs
     and sweep lanes, so their reports cannot drift."""
     times = sched.t0 + np.concatenate([[0.0], np.cumsum(sched.durations)])
@@ -301,7 +303,8 @@ def _lane_report(session: "Session", state: Any, sched: EpochSchedule,
         setup_time=sched.setup_time,
         uplink_bits_total=session.strategy.uplink_bits(
             state, session.fleet, session.epochs),
-        extras=dict(extras_fn(state)) if extras_fn is not None else {})
+        extras=dict(extras_fn(state)) if extras_fn is not None else {},
+        beta=beta)
 
 
 @dataclasses.dataclass
@@ -349,8 +352,8 @@ class Session:
             state = self.strategy.plan(self.fleet, data)
         sched: EpochSchedule = self.strategy.sample_epochs(
             state, self.fleet, self.epochs, rng)
-        nmse_trace = _execute_lanes([(self, state, sched)], data)[0]
-        return _lane_report(self, state, sched, nmse_trace, label)
+        nmse_trace, beta = _execute_lanes([(self, state, sched)], data)[0]
+        return _lane_report(self, state, sched, nmse_trace, label, beta=beta)
 
 
 def plan_sweep(sessions: Sequence[Session], data: TrainData) -> List[Any]:
@@ -436,6 +439,6 @@ def run_sweep(sessions: Sequence[Session], data: TrainData,
                          sess.strategy.sample_epochs)
         entries.append((sess, state,
                         sample(state, sess.fleet, sess.epochs, rng)))
-    traces = _execute_lanes(entries, data)
-    return [_lane_report(sess, state, sched, trace)
-            for (sess, state, sched), trace in zip(entries, traces)]
+    results = _execute_lanes(entries, data)
+    return [_lane_report(sess, state, sched, trace, beta=beta)
+            for (sess, state, sched), (trace, beta) in zip(entries, results)]

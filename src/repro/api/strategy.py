@@ -89,6 +89,16 @@ class TrainData:
     def m(self) -> int:
         return self.n * self.ell
 
+    @property
+    def model_dim(self) -> int:
+        """Dimension of the trained model iterate (`beta_true.shape[0]`).
+
+        Equal to `d` for the raw linear-regression workloads; differs when
+        the strategy trains in a transformed space (e.g. `CodedFedL`'s
+        random-Fourier-feature head, where `xs` holds raw inputs of width
+        `d` but the model lives in the `d_feat`-wide feature space)."""
+        return int(self.beta_true.shape[0])
+
     @classmethod
     def linreg(cls, key: jax.Array, n: int, ell: int, d: int,
                noise_std: float = 1.0) -> "TrainData":

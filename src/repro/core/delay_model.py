@@ -176,6 +176,81 @@ def partial_cdf(params: DeviceDelayParams, ell, t, chunks: int) -> np.ndarray:
     return np.where(comm[:, None], mix, base)
 
 
+def mec_total_cdf(params: DeviceDelayParams, ell, t) -> np.ndarray:
+    """Pr{T_i <= t} under the CodedFedL MEC delay model (arXiv:2007.03273).
+
+    The compute leg is the base shifted exponential (shift ell*a, rate
+    mu/ell); the communication leg is ALSO a shifted exponential — shift
+    `2 tau` (the erasure-free two-way transfer) and rate
+    `gm = (1 - p) / (2 tau p)`, matching the geometric retransmission
+    model's minimum and mean.  The total CDF is the closed-form
+    convolution of the two exponentials at residual u = t - ell*a - 2 tau:
+
+        F(u) = 1 - (gm e^{-gc u} - gc e^{-gm u}) / (gm - gc)
+
+    with the equal-rate limit `1 - (1 + g u) e^{-g u}` where the rates
+    collide, and the pure compute CDF at the same residual for devices
+    whose communication leg is deterministic (`p == 0` or `tau == 0` —
+    the latter makes this bit-identical to `compute_cdf`, i.e. the server).
+
+    This is the float64 host mirror of the `mec_comm` evaluator in
+    `repro.plan._solve_grid`, term for term — the Eq.-17 weights
+    sqrt(1 - p_return) must see the SAME probabilities the solver
+    optimized.  `ell` broadcasts as in `total_cdf`.
+    """
+    ell = np.asarray(ell, dtype=np.float64)
+    ell = np.broadcast_to(ell, np.broadcast_shapes(ell.shape, params.a.shape))
+    t = float(t)
+
+    shift = ell * params.a
+    gc = params.mu / np.maximum(ell, 1.0)
+    gm = (1.0 - params.p) / np.maximum(2.0 * params.tau * params.p, 1e-30)
+    u = t - shift - 2.0 * params.tau
+    up = np.maximum(u, 0.0)
+    e_c = np.exp(-np.minimum(gc * up, 700.0))
+    e_m = np.exp(-np.minimum(gm * up, 700.0))
+    denom = gm - gc
+    close = np.abs(denom) <= 1e-8 * np.maximum(gm, gc)
+    safe = np.where(close, 1.0, denom)
+    f_neq = 1.0 - (gm * e_c - gc * e_m) / safe
+    gbar = 0.5 * (gm + gc)
+    arg = np.minimum(gbar * up, 700.0)
+    f_eq = -np.expm1(-arg) - arg * np.exp(-arg)
+    cdf = np.where(close, f_eq, f_neq)
+    cdf = np.where(u > 0.0, cdf, 0.0)
+    det = np.logical_or(params.p <= 0.0, params.tau <= 0.0)
+    cdf_det = np.where(
+        u > 0.0, -np.expm1(-np.minimum(gc * up, 700.0)), 0.0)
+    cdf = np.where(det, cdf_det, cdf)
+    return np.where(ell > 0, cdf, (u >= 0.0).astype(np.float64))
+
+
+def sample_total_mec(params: DeviceDelayParams, ell,
+                     rng: np.random.Generator,
+                     size: Optional[int] = None) -> np.ndarray:
+    """Draw T_i under the MEC delay model (see `mec_total_cdf`).
+
+    Same compute draw as `sample_total`; the communication leg replaces
+    the two geometric transmission-count draws with ONE exponential
+    excess over the deterministic `2 tau` floor.  Always consumes exactly
+    two generator draws per device per call (compute + comm excess), so
+    the draw order is load- and parameter-independent.
+    """
+    ell = np.broadcast_to(np.asarray(ell, dtype=np.float64), params.a.shape)
+    shape = (params.n,) if size is None else (size, params.n)
+    shift = ell * params.a
+    with np.errstate(divide="ignore", invalid="ignore"):
+        scale = np.where(ell > 0, ell / params.mu, 0.0)
+    t_c = shift + rng.exponential(1.0, size=shape) * scale
+    comm = params.tau > 0
+    stochastic = np.logical_and(comm, params.p > 0)
+    gm = (1.0 - params.p) / np.maximum(2.0 * params.tau * params.p, 1e-30)
+    excess = rng.exponential(1.0, size=shape) / gm
+    t_comm = np.where(comm, 2.0 * params.tau, 0.0) \
+        + np.where(stochastic, excess, 0.0)
+    return t_c + t_comm
+
+
 def sample_total(params: DeviceDelayParams, ell, rng: np.random.Generator,
                  size: Optional[int] = None) -> np.ndarray:
     """Draw T_i for every device.  Returns (n,) or (size, n)."""

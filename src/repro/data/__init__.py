@@ -1,7 +1,11 @@
-"""Synthetic data pipelines: the paper's linreg generator and an LM token
-stream with client partitioning for federated runs."""
-from .synthetic import linreg_dataset, token_batches
+"""Synthetic data pipelines: the paper's linreg generator, an LM token
+stream with client partitioning for federated runs, the MNIST-class
+classification generator, and the CodedFedL random-Fourier-feature map."""
 from .partition import partition_iid, partition_noniid
+from .rff import rff_map, rff_map_reference
+from .synthetic import (classification_dataset, linreg_dataset,
+                        one_vs_rest_targets, token_batches)
 
 __all__ = ["linreg_dataset", "token_batches", "partition_iid",
-           "partition_noniid"]
+           "partition_noniid", "classification_dataset",
+           "one_vs_rest_targets", "rff_map", "rff_map_reference"]

@@ -1,0 +1,64 @@
+"""Random Fourier features (Rahimi & Recht) — the CodedFedL transform.
+
+CodedFedL (arXiv:2007.03273) extends coded federated learning to
+non-linear models by mapping raw inputs through a random Fourier feature
+map and running kernel (least-squares) regression in the feature space —
+the model stays linear-in-parameters, so the paper's parity-gradient
+identity and the whole coded linear machinery apply unchanged.
+
+The construction is the standard cos/sin pair for the Gaussian kernel
+`k(u, v) = exp(-gamma * ||u - v||^2)`:
+
+    W      ~ sqrt(2 * gamma) * N(0, I)      of shape (d, d_feat // 2)
+    z(x)   = sqrt(2 / d_feat) * [cos(x W), sin(x W)]
+
+so that `E[z(u) . z(v)] = k(u, v)` exactly, with the approximation error
+decaying as `1/sqrt(d_feat)`.  The map is deterministic in `key`: clients
+and server derive the SAME features from the shared key, which is what
+lets the server encode parity over feature-mapped data it never saw raw.
+
+`rff_map_reference` is the float64 NumPy oracle (same W draw, float64
+math) used by `tests/test_nonlinear.py` for parity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _rff_weights(key: jax.Array, d: int, d_feat: int,
+                 gamma: float) -> jax.Array:
+    if d_feat < 2 or d_feat % 2:
+        raise ValueError(
+            f"d_feat must be a positive even number (cos/sin pairs), "
+            f"got {d_feat}")
+    return jnp.sqrt(2.0 * gamma) * jax.random.normal(
+        key, (d, d_feat // 2), dtype=jnp.float32)
+
+
+def rff_map(x: jax.Array, d_feat: int, key: jax.Array,
+            gamma: float = 1.0) -> jax.Array:
+    """Map `x (..., d)` to `(..., d_feat)` random Fourier features.
+
+    Approximates the Gaussian kernel `exp(-gamma * ||u - v||^2)`:
+    `z(u) . z(v)` is an unbiased estimate of it for any fixed pair.
+    Deterministic in `(key, d_feat, gamma)` and the input width.
+    """
+    x = jnp.asarray(x)
+    w = _rff_weights(key, int(x.shape[-1]), d_feat, gamma)
+    proj = x @ w
+    scale = jnp.sqrt(jnp.asarray(2.0 / d_feat, dtype=proj.dtype))
+    return scale * jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=-1)
+
+
+def rff_map_reference(x: np.ndarray, d_feat: int, key: jax.Array,
+                      gamma: float = 1.0) -> np.ndarray:
+    """Float64 NumPy oracle for `rff_map` (same jax weight draw, float64
+    trig/matmul) — parity target for the float32 production path."""
+    x = np.asarray(x, dtype=np.float64)
+    w = np.asarray(_rff_weights(key, int(x.shape[-1]), d_feat, gamma),
+                   dtype=np.float64)
+    proj = x @ w
+    return np.sqrt(2.0 / d_feat) * np.concatenate(
+        [np.cos(proj), np.sin(proj)], axis=-1)

@@ -5,6 +5,11 @@
 * `token_batches`: a deterministic, seeded LM token stream (Zipfian unigram
   + short-range induction structure so models have something learnable) used
   by the end-to-end training example and smoke tests.
+* `classification_dataset`: an MNIST-class synthetic classification set —
+  labels come from a random RBF-network teacher, so the decision regions
+  are genuinely non-linear in the raw inputs and a Gaussian-kernel machine
+  (the `repro.data.rff` feature map) separates what a linear model cannot.
+  This is the CodedFedL (arXiv:2007.03273) workload.
 """
 from __future__ import annotations
 
@@ -24,6 +29,39 @@ def linreg_dataset(key: jax.Array, n_clients: int, ell: int, d: int,
     zs = noise_std * jax.random.normal(k3, (n_clients, ell), dtype=jnp.float32)
     ys = jnp.einsum("nld,d->nl", xs, beta) + zs
     return xs, ys, beta
+
+
+def classification_dataset(key: jax.Array, n_clients: int, ell: int, d: int,
+                           n_classes: int = 10, centers: int = 32,
+                           gamma: float = 1.0):
+    """Client-sharded synthetic classification with non-linear class regions.
+
+    Inputs are iid N(0, 1); labels come from a random RBF-network teacher:
+    `score_c(x) = sum_j A[c, j] * exp(-gamma * ||x - z_j||^2 / d)` over
+    `centers` random centers `z_j`, `label = argmax_c score_c(x)`.  The
+    1/d scaling keeps the teacher kernel width O(1) as the squared
+    distances concentrate around 2d, so an RFF map with
+    `gamma_feat = gamma / d` approximates the matching Gaussian kernel.
+
+    Returns `(xs (n, ell, d) float32, labels (n, ell) int32)`.
+    """
+    if n_classes < 2:
+        raise ValueError(f"n_classes must be >= 2, got {n_classes}")
+    k1, k2, k3 = jax.random.split(key, 3)
+    xs = jax.random.normal(k1, (n_clients, ell, d), dtype=jnp.float32)
+    zc = jax.random.normal(k2, (centers, d), dtype=jnp.float32)
+    amp = jax.random.normal(k3, (n_classes, centers), dtype=jnp.float32)
+    sq = (jnp.sum(xs**2, axis=-1, keepdims=True)
+          - 2.0 * xs @ zc.T + jnp.sum(zc**2, axis=-1))      # (n, ell, C)
+    feats = jnp.exp(-gamma * sq / d)
+    labels = jnp.argmax(feats @ amp.T, axis=-1).astype(jnp.int32)
+    return xs, labels
+
+
+def one_vs_rest_targets(labels: jax.Array, cls: int) -> jax.Array:
+    """±1 regression targets for the one-vs-rest head of class `cls` —
+    least-squares on signed labels, the CodedFedL classification recipe."""
+    return jnp.where(labels == cls, 1.0, -1.0).astype(jnp.float32)
 
 
 def _zipf_probs(vocab: int, alpha: float = 1.1) -> np.ndarray:

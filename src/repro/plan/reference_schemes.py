@@ -1,14 +1,16 @@
 """Host-side scalar reference solves for the `repro.schemes` strategies.
 
-Mirrors `repro.plan.reference` for the two follow-up coding schemes: the
-stochastic-CFL weighted-server objective (arXiv:2201.10092) and the
-low-latency partial-return objective (arXiv:2011.06223).  Same style as the
+Mirrors `repro.plan.reference` for the follow-up coding schemes: the
+stochastic-CFL weighted-server objective (arXiv:2201.10092), the
+low-latency partial-return objective (arXiv:2011.06223), and the CodedFedL
+MEC shifted-exponential objective (arXiv:2007.03273).  Same style as the
 seed stack — NumPy float64, one analytic-CDF evaluation per integer load
 per chunk, bracket + 64-iteration bisection on the deadline — and the same
 two jobs only:
 
   * parity oracles for the batched grid solver's new objective evaluators
-    (`tests/test_schemes.py`: loads identical, t* within 1e-3 relative);
+    (`tests/test_schemes.py` / `tests/test_nonlinear.py`: loads identical,
+    t* within 1e-3 relative);
   * the calibrated-noise-scale oracle for `StochasticCodedFL`
     (`stochastic_noise_scale`).
 
@@ -18,7 +20,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.delay_model import (K_MAX, DeviceDelayParams, _nbinom_pmf)
+from repro.core.delay_model import (K_MAX, DeviceDelayParams, _nbinom_pmf,
+                                    mec_total_cdf)
 from repro.core.redundancy import RedundancyPlan
 from repro.plan.reference import (_oracle_chunk, optimal_loads_loop,
                                   total_cdf_loop)
@@ -100,6 +103,66 @@ def optimal_loads_partial_loop(params: DeviceDelayParams, caps: np.ndarray,
         best_val = np.where(better, chunk_best, best_val)
         best_ell = np.where(better, loads[idx].astype(np.int64), best_ell)
     return best_ell, best_val
+
+
+# ---------------------------------------------------------------------------
+# MEC shifted-exponential (CodedFedL) edge objective
+# ---------------------------------------------------------------------------
+
+def mec_expected_return(params: DeviceDelayParams, ell, t) -> np.ndarray:
+    """E[points returned by t] under the MEC model: ell * Pr{T_i <= t}.
+
+    `core.delay_model.mec_total_cdf` IS the float64 scalar formula (the
+    production weights read it too), so the oracle reuses it directly —
+    the independence being tested is the load-grid argmax + deadline
+    bisection against the batched grid solver, not the CDF arithmetic.
+    """
+    ell = np.broadcast_to(np.asarray(ell, dtype=np.float64), params.a.shape)
+    return ell * mec_total_cdf(params, ell, t)
+
+
+def optimal_loads_mec_loop(params: DeviceDelayParams, caps: np.ndarray,
+                           t: float, chunk: int = 512
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-integer-load grid search for the MEC objective."""
+    caps = np.asarray(caps, dtype=np.int64)
+    n = params.n
+    chunk = _oracle_chunk(n, chunk)
+    l_max = int(caps.max())
+    best_val = np.zeros(n, dtype=np.float64)
+    best_ell = np.zeros(n, dtype=np.int64)
+    for lo in range(1, l_max + 1, chunk):
+        hi = min(lo + chunk - 1, l_max)
+        loads = np.arange(lo, hi + 1, dtype=np.float64)
+        grid = np.broadcast_to(loads[:, None], (loads.shape[0], n))
+        vals = grid * mec_total_cdf(params, grid, t)         # (L, n)
+        mask = loads[:, None] <= caps[None, :]
+        vals = np.where(mask, vals, -np.inf)
+        idx = np.argmax(vals, axis=0)
+        chunk_best = vals[idx, np.arange(n)]
+        better = chunk_best > best_val
+        best_val = np.where(better, chunk_best, best_val)
+        best_ell = np.where(better, loads[idx].astype(np.int64), best_ell)
+    return best_ell, best_val
+
+
+def solve_codedfedl_reference(edge: DeviceDelayParams,
+                              server: DeviceDelayParams,
+                              data_sizes: np.ndarray,
+                              c_up: int | None = None,
+                              fixed_c: int | None = None,
+                              eps_rel: float = 1e-3,
+                              t_hi: float | None = None) -> RedundancyPlan:
+    """CodedFedL allocation oracle: MEC shifted-exponential edge objective,
+    undiscounted all-or-nothing server.  Parity target: loads identical,
+    t* within 1e-3 relative (the returned `p_return` is the base-model
+    CDF from the shared scaffold — the parity tests compare loads/t* only;
+    production MEC return probabilities come from
+    `core.delay_model.mec_total_cdf`)."""
+    def edge_loads(caps, t):
+        return optimal_loads_mec_loop(edge, caps, t)
+    return _solve_two_part(edge, server, data_sizes, edge_loads, 1.0,
+                           c_up, fixed_c, eps_rel, t_hi)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,16 @@ subsystem builds on).  Two knobs on `PlanRequest` select the evaluator:
     allocation stays a nontrivial argmax.  `edge_chunks` is a static shape
     fact, so requests group by `(padded n, edge_chunks)`; `edge_chunks == 1`
     takes the base code path unchanged.
+  * `mec_comm` switches the edge evaluator to the multi-access edge
+    computing delay model of CodedFedL (arXiv:2007.03273): instead of the
+    discrete retransmission mixture, each device's communication leg is a
+    SHIFTED EXPONENTIAL (shift `2 tau`, rate `(1 - p) / (2 tau p)` —
+    matching the base geometric model's minimum and mean), and the edge
+    return is `ell * Pr{T_comp + T_comm <= t}` via the closed-form
+    two-exponential convolution.  A static trace-time branch: requests
+    group by `(padded n, edge_chunks, mec_comm)`; `mec_comm == False`
+    leaves the base evaluator untouched, and devices with `p == 0` or
+    `tau == 0` fall back to the deterministic-comm compute CDF exactly.
 
 Numerics: the solver runs in float64 under a scoped `enable_x64` so its
 loads/probabilities match the float64 NumPy reference to well below the
@@ -60,7 +70,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.delay_model import DeviceDelayParams, K_MAX, total_cdf
+from repro.core.delay_model import (DeviceDelayParams, K_MAX, mec_total_cdf,
+                                    total_cdf)
 from repro.core.redundancy import RedundancyPlan
 
 GRID_POINTS = 16    # deadline-grid resolution per refinement round
@@ -88,6 +99,9 @@ class PlanRequest:
                 (stochastic-CFL noise/subsampling discount; 1.0 = base CFL)
     edge_chunks: per-epoch partial-upload chunks per device (low-latency
                 wireless objective; 1 = all-or-nothing base CFL)
+    mec_comm:   model each device's communication leg as the CodedFedL
+                shifted-exponential MEC link instead of the discrete
+                retransmission mixture (False = base CFL)
     """
 
     edge: DeviceDelayParams
@@ -98,6 +112,7 @@ class PlanRequest:
     t_hi: Optional[float] = None
     srv_weight: float = 1.0
     edge_chunks: int = 1
+    mec_comm: bool = False
 
     def __post_init__(self):
         object.__setattr__(
@@ -108,6 +123,10 @@ class PlanRequest:
         if int(self.edge_chunks) < 1:
             raise ValueError(
                 f"edge_chunks must be >= 1, got {self.edge_chunks}")
+        if self.mec_comm and int(self.edge_chunks) > 1:
+            raise ValueError(
+                "mec_comm models whole-assignment uploads; combining it "
+                "with edge_chunks > 1 partial uploads is not defined")
         if self.server.n != 1:
             raise ValueError("server params must describe exactly one device")
         if float(self.server.tau[0]) != 0.0:
@@ -137,11 +156,12 @@ class PlanRequest:
         return max(edge_mean, srv_mean) + 1.0
 
 
-@functools.partial(jax.jit, static_argnames=("search_f32", "edge_chunks"))
+@functools.partial(jax.jit, static_argnames=("search_f32", "edge_chunks",
+                                             "mec_comm"))
 def _solve_grid(a, mu, tau, p, srv_a, srv_mu, srv_w, caps, srv_cap, target,
                 t_hi0, eps_rel, ell_e, ell_s, ks_search, ks_extract,
                 mask_search, mask_extract, frac, *, search_f32=True,
-                edge_chunks=1):
+                edge_chunks=1, mec_comm=False):
     """Batched grid solve.  All inputs float64 except integer caps.
 
     a/mu/tau/p: (B, n) edge delay params    srv_a/srv_mu: (B,) server params
@@ -149,6 +169,8 @@ def _solve_grid(a, mu, tau, p, srv_a, srv_mu, srv_w, caps, srv_cap, target,
     caps: (B, n) load caps                  srv_cap: (B,) parity budgets
     target: (B,) aggregate-return targets   t_hi0: (B,) initial brackets
     edge_chunks: static partial-return chunk count (1 = all-or-nothing)
+    mec_comm: static flag — shifted-exponential MEC communication legs
+              (CodedFedL) instead of the retransmission mixture
     ell_e: (L,) edge load grid 0..L-1       ell_s: (Ls,) server load grid
     ks_search:  (K,) retransmission counts for the deadline search (tail
                 below ~1e-12: invisible to any eps_rel)
@@ -243,7 +265,55 @@ def _solve_grid(a, mu, tau, p, srv_a, srv_mu, srv_w, caps, srv_cap, target,
             return jnp.where(ell_e_ > 0.0, cdf,
                              (t_res[..., None] >= 0.0).astype(dtype))
 
-        def edge_returns(t):
+        def edge_returns_mec(t):
+            """Masked MEC E[R_i(t; ell)] grid.  t: (B, T') -> (B, T', n, L).
+
+            CodedFedL's delay model: T_comp is the base shifted
+            exponential (shift ell*a, rate mu/ell) but the communication
+            leg is ALSO a shifted exponential — shift `2 tau` (the
+            erasure-free two-way transfer), rate
+            `gm = (1 - p) / (2 tau p)`, chosen so the MEC link matches the
+            base geometric retransmission model's minimum (2 tau) and mean
+            excess (2 tau p / (1 - p)).  The completion CDF is the
+            closed-form convolution of the two exponentials at residual
+            `u = t - ell*a - 2 tau`:
+
+                F(u) = 1 - (gm e^{-gc u} - gc e^{-gm u}) / (gm - gc)
+
+            with the equal-rate limit `1 - (1 + g u) e^{-g u}` taken where
+            the rates collide (within a relative tie margin, so the
+            division never amplifies a catastrophic cancellation).
+            Devices with `p == 0` or `tau == 0` have a DETERMINISTIC
+            communication leg and fall back to the pure compute CDF at the
+            same residual — bit-identical to the base evaluator when
+            tau == 0 everywhere.  Monotone in t by construction.
+            """
+            gc = gamma                                          # (B, n, L)
+            gm = (1.0 - p_) / jnp.maximum(2.0 * tau_ * p_, 1e-30)  # (B, n)
+            gm_l = gm[:, :, None]                               # (B, n, 1)
+            u = t[:, :, None, None] - shift[:, None, :, :] \
+                - 2.0 * tau_[:, None, :, None]                  # (B,T',n,L)
+            up = jnp.maximum(u, 0.0)
+            e_c = jnp.exp(-jnp.minimum(gc[:, None] * up, 700.0))
+            e_m = jnp.exp(-jnp.minimum(gm_l[:, None] * up, 700.0))
+            denom = gm_l - gc                                   # (B, n, L)
+            close = jnp.abs(denom) <= 1e-8 * jnp.maximum(gm_l, gc)
+            safe = jnp.where(close, jnp.ones((), dtype=dtype), denom)
+            f_neq = 1.0 - (gm_l[:, None] * e_c - gc[:, None] * e_m) \
+                / safe[:, None]
+            gbar = 0.5 * (gm_l + gc)
+            arg = jnp.minimum(gbar[:, None] * up, 700.0)
+            f_eq = -jnp.expm1(-arg) - arg * jnp.exp(-arg)
+            cdf = jnp.where(close[:, None], f_eq, f_neq)
+            cdf = jnp.where(u > 0.0, cdf, 0.0)
+            # deterministic communication leg: pure compute CDF at u
+            det = jnp.logical_or(p_ <= 0.0, tau_ <= 0.0)        # (B, n)
+            cdf = jnp.where(det[:, None, :, None],
+                            _shifted_exp_cdf(gc[:, None], u), cdf)
+            cdf = jnp.where(ell_e_ > 0.0, cdf, (u >= 0.0).astype(dtype))
+            return jnp.where(load_ok[:, None], ell_e_ * cdf, -jnp.inf)
+
+        def edge_returns_base(t):
             """Masked E[R_i(t; ell)] grid.  t: (B, T') -> (B, T', n, L)."""
             def add_k(i, acc):
                 t_res = t[:, :, None] - ks_[i] * tau_[:, None, :]
@@ -261,6 +331,8 @@ def _solve_grid(a, mu, tau, p, srv_a, srv_mu, srv_w, caps, srv_cap, target,
                 jnp.broadcast_to(t[:, :, None], t.shape + (a.shape[1],)))
             mix = jnp.where(has_comm[:, None, :, None], mix, nocomm)
             return jnp.where(load_ok[:, None], ell_e_ * mix, -jnp.inf)
+
+        edge_returns = edge_returns_mec if mec_comm else edge_returns_base
 
         def server_returns(t):
             """Masked weighted server E[R(t; ell)].  (B, T') -> (B, T', Ls).
@@ -396,23 +468,25 @@ def solve_redundancy_batched(requests: Sequence[PlanRequest],
                              ) -> list[RedundancyPlan]:
     """Plan a whole sweep of fleets/budgets in one vectorized solve.
 
-    Requests are grouped by (padded device count, edge_chunks); each group
-    runs as a single jitted `(B, n)` solve.  Mixed `fixed_c` /
+    Requests are grouped by (padded device count, edge_chunks, mec_comm);
+    each group runs as a single jitted `(B, n)` solve.  Mixed `fixed_c` /
     free-redundancy / `srv_weight` requests batch fine — budget and weight
-    are per-request inputs; `edge_chunks` changes the compiled evaluator,
-    so partial-return requests form their own groups.  Raises RuntimeError
-    (like the legacy solver) if any request's fleet cannot reach its target.
+    are per-request inputs; `edge_chunks` and `mec_comm` change the
+    compiled evaluator, so those requests form their own groups.  Raises
+    RuntimeError (like the legacy solver) if any request's fleet cannot
+    reach its target.
     """
     requests = list(requests)
     plans: list[Optional[RedundancyPlan]] = [None] * len(requests)
-    groups: dict[tuple[int, int], list[int]] = {}
+    groups: dict[tuple[int, int, bool], list[int]] = {}
     for i, req in enumerate(requests):
-        key = (_bucket(req.edge.n, _N_BUCKET), int(req.edge_chunks))
+        key = (_bucket(req.edge.n, _N_BUCKET), int(req.edge_chunks),
+               bool(req.mec_comm))
         groups.setdefault(key, []).append(i)
 
     frac = np.arange(1, grid_points + 1, dtype=np.float64) / grid_points
 
-    for (n_pad, edge_chunks), idxs in groups.items():
+    for (n_pad, edge_chunks, mec_comm), idxs in groups.items():
         grp = [requests[i] for i in idxs]
         b = len(grp)
 
@@ -461,7 +535,8 @@ def solve_redundancy_batched(requests: Sequence[PlanRequest],
                 np.arange(2, 2 + max(k_search), dtype=np.float64),
                 np.arange(2, 2 + max(k_extract), dtype=np.float64),
                 k_mask(k_search), k_mask(k_extract), frac,
-                search_f32=search_f32, edge_chunks=edge_chunks)
+                search_f32=search_f32, edge_chunks=edge_chunks,
+                mec_comm=mec_comm)
             t_star, loads, s_load, agg, feasible = \
                 (np.asarray(o) for o in out)
 
@@ -482,9 +557,12 @@ def solve_redundancy_batched(requests: Sequence[PlanRequest],
                 else int(s_load[j])
             dev_loads = loads[j, :n].astype(np.int64)
             # per-device return probs re-evaluated on the host: bit-identical
-            # to every downstream total_cdf consumer (see _solve_grid docs)
+            # to every downstream total_cdf consumer (see _solve_grid docs);
+            # mec groups read the matching MEC CDF (the server has no comm
+            # leg, so its total_cdf is the same compute CDF either way)
+            edge_cdf = mec_total_cdf if mec_comm else total_cdf
             p_return = np.append(
-                total_cdf(req.edge, dev_loads, float(t_star[j])),
+                edge_cdf(req.edge, dev_loads, float(t_star[j])),
                 total_cdf(req.server, np.array([float(s_load[j])]),
                           float(t_star[j])))
             plans[i] = RedundancyPlan(

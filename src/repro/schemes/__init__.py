@@ -11,11 +11,15 @@ new epoch loops, no new host solvers:
   * `LowLatencyCFL` — partial-return CFL for heterogeneous wireless
     fleets, chunked uploads + joint load/deadline solve
     (arXiv:2011.06223; `PlanRequest.edge_chunks`).
+  * `CodedFedL` — random-Fourier-feature kernel regression over the coded
+    linear machinery, with the multi-access-edge shifted-exponential
+    communication model (arXiv:2007.03273; `PlanRequest.mec_comm`).
 
 Construct them directly or via `repro.api.make_strategy("stochastic", ...)`
-/ `make_strategy("lowlatency", ...)`.
+/ `make_strategy("lowlatency", ...)` / `make_strategy("codedfedl", ...)`.
 """
 from .base import CodedSchemeState
+from .codedfedl import CodedFedL, CodedFedLState
 from .lowlatency import LowLatencyCFL, LowLatencyState
 from .stochastic import StochasticCodedFL, StochasticState
 
@@ -23,4 +27,5 @@ __all__ = [
     "CodedSchemeState",
     "StochasticCodedFL", "StochasticState",
     "LowLatencyCFL", "LowLatencyState",
+    "CodedFedL", "CodedFedLState",
 ]

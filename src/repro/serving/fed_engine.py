@@ -205,7 +205,7 @@ class _LaneGroup:
                      "min_epochs": jnp.ones(b, jnp.int32),
                      "budget": jnp.zeros(b, jnp.int32)}
         nmse0 = engine._nmse0
-        self.carry = (jnp.zeros((b, data.d), dtype),
+        self.carry = (jnp.zeros((b, data.model_dim), dtype),
                       jnp.zeros(b, jnp.int32),
                       jnp.full(b, nmse0, dtype),
                       jnp.zeros((b, epochs + 1), dtype),
@@ -237,7 +237,7 @@ class _LaneGroup:
         crit = prep.criterion
         nmse0 = engine._nmse0
         trace0 = jnp.zeros(self.epochs + 1, dtype).at[0].set(nmse0)
-        lane_carry = (jnp.zeros(data.d, dtype), jnp.int32(0),
+        lane_carry = (jnp.zeros(data.model_dim, dtype), jnp.int32(0),
                       jnp.asarray(nmse0, dtype), trace0,
                       jnp.asarray(False), jnp.asarray(False))
         lane_dev = {k: prep.dev[k] for k in self.dev_b}
@@ -254,9 +254,10 @@ class _LaneGroup:
             jnp.int32(slot), lane_carry, lane_dev, lane_arr, lane_ctrl)
         self.slots[slot] = prep
 
-    def step(self) -> List[Tuple[int, _Prepared, np.ndarray, int, bool]]:
+    def step(self) -> List[Tuple[int, _Prepared, np.ndarray, int, bool,
+                                 np.ndarray]]:
         """Advance all lanes one chunk; return the finished ones as
-        `(slot, prepared, trace_row, exit_epoch, converged)`."""
+        `(slot, prepared, trace_row, exit_epoch, converged, beta)`."""
         self.carry = self.step_fn(self.shared, self.carry, self.dev_b,
                                   self.arr_b, self.ctrl)
         stop = np.asarray(self.carry[4])
@@ -267,7 +268,8 @@ class _LaneGroup:
             t_exit = int(np.asarray(self.carry[1][slot]))
             trace = np.asarray(self.carry[3][slot])
             conv = bool(np.asarray(self.carry[5][slot]))
-            finished.append((slot, occ, trace, t_exit, conv))
+            beta = np.asarray(self.carry[0][slot])
+            finished.append((slot, occ, trace, t_exit, conv, beta))
             self.slots[slot] = None
         return finished
 
@@ -312,7 +314,7 @@ class FedServeEngine:
         # the t=0 probe, computed by the same jitted expression the
         # engines trace (bit-equal to the solo trace's first entry)
         self._nmse0 = jax.jit(aggregation.nmse)(
-            jnp.zeros(data.d, data.xs.dtype), data.beta_true)
+            jnp.zeros(data.model_dim, data.xs.dtype), data.beta_true)
 
     # -- submission --------------------------------------------------------
 
@@ -432,8 +434,8 @@ class FedServeEngine:
         for group in self._groups.values():
             if not group.running:
                 continue
-            for _, prep, trace, t_exit, conv in group.step():
-                report = self._report(prep, trace, t_exit, conv)
+            for _, prep, trace, t_exit, conv, beta in group.step():
+                report = self._report(prep, trace, t_exit, conv, beta)
                 self._done[prep.request.uid] = report
                 del self._prepared[prep.request.uid]
                 harvested.append(report)
@@ -465,7 +467,8 @@ class FedServeEngine:
     # -- reporting ---------------------------------------------------------
 
     def _report(self, prep: _Prepared, trace: np.ndarray, t_exit: int,
-                converged: bool) -> TraceReport:
+                converged: bool,
+                beta: Optional[np.ndarray] = None) -> TraceReport:
         """Assemble the truncated-run TraceReport: a PREFIX of the solo
         report up to the exit epoch, with the early-exit point (and a
         correspondingly truncated privacy schedule) on `extras`."""
@@ -494,7 +497,8 @@ class FedServeEngine:
             setup_time=sched.setup_time,
             uplink_bits_total=sess.strategy.uplink_bits(
                 prep.state, sess.fleet, t_exit),
-            extras=extras)
+            extras=extras,
+            beta=beta)
 
     # -- introspection -----------------------------------------------------
 
