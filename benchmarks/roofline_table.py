@@ -1,14 +1,21 @@
 """Roofline tables (EXPERIMENTS.md §Roofline).
 
-Two sections:
+Three sections:
 
   * coded-kernel attainment — measured wall time vs the roofline lower
     bound for the coded Pallas kernels (`kernels/encode`,
-    `kernels/coded_grad`) at default and tuned (`repro.tune` cache)
-    tiles.  Always printed: it needs only the local backend.  On CPU
-    the kernels run in interpret mode, so attainment is honest-but-tiny
-    (the bound models TPU-class hardware); what the column is FOR is
-    comparing tiles against each other and watching the trajectory.
+    `kernels/coded_grad`, `kernels/round_grad`) at default and tuned
+    (`repro.tune` cache) tiles.  Always printed: it needs only the
+    local backend.  On CPU the kernels run in interpret mode, so
+    attainment is honest-but-tiny (the bound models TPU-class
+    hardware); what the column is FOR is comparing tiles against each
+    other and watching the trajectory.
+  * round-gradient fusion — the epoch hot loop's bytes model before
+    (reference: two passes over X for the systematic block plus two
+    over the parity block) and after fusion (one pass over the PACKED
+    systematic rows plus the (d, d) Gram term), with the implied
+    roofline speedup and the measured one-call speedup on the local
+    backend.
   * dry-run mesh table — three terms per (arch x shape) from the
     recorded dry-run, single-pod mesh, with the MODEL_FLOPS/HLO_FLOPs
     useful-compute ratio and the dominant bottleneck.  Skipped with a
@@ -30,7 +37,12 @@ RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
 ATTAINMENT_SHAPES = {
     "encode": [(936, 300, 500)],
     "coded_grad": [(936, 500)],
+    "round_grad": [(5632, 500)],
 }
+
+# §IV epoch-gradient operating point for the fusion section: m full rows,
+# k packed rows (bucket-padded systematic support), c parity rows.
+FUSION_SHAPE = {"m": 7200, "k": 5632, "c": 2016, "d": 500}
 
 
 def coded_kernel_rows(iters: int = 3, shapes: dict | None = None):
@@ -64,6 +76,68 @@ def coded_kernel_rows(iters: int = 3, shapes: dict | None = None):
                     "backend": backend(),
                 })
     return out
+
+
+def round_grad_fusion_rows(iters: int = 5, shape: dict | None = None):
+    """Bytes model + measured wall for the epoch gradient pre/post fusion.
+
+    reference: `resid = X beta - y` then `(w . resid) X` — two sweeps
+    over the full (m, d) block — plus the same two sweeps over the
+    (c, d) parity block (Eq. 18).  fused: ONE sweep over the (k, d)
+    packed systematic rows plus the Gram-folded parity term
+    `(G beta - b) / c`, which reads (d, d) instead of (c, d) twice.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import aggregation
+    from repro.kernels.common import backend
+    from repro.tune.tuner import measure
+
+    s = dict(FUSION_SHAPE, **(shape or {}))
+    m, k, c, d = s["m"], s["k"], s["c"], s["d"]
+    bytes_ref = 4 * (2 * m * d + 2 * c * d)
+    bytes_fused = 4 * (k * d + d * d)
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    x = jax.random.normal(ks[0], (m, d))
+    y = jax.random.normal(ks[1], (m,))
+    w = (jax.random.uniform(ks[2], (m,)) < k / m).astype(x.dtype)
+    xp = jax.random.normal(ks[3], (c, d))
+    yp = jax.random.normal(ks[4], (c,))
+    beta = jax.random.normal(ks[5], (d,))
+    xk = x[:k]
+    yk = y[:k]
+    wk = w[:k]
+    gram, gramy = aggregation.parity_gram(xp, yp)
+
+    def reference(x, y, w, xp, yp, beta):
+        resid = x @ beta - y
+        g_sys = (resid * w) @ x
+        g_par = ((xp @ beta - yp) / c) @ xp
+        return g_sys + g_par
+
+    def fused(xk, yk, wk, gram, gramy, beta):
+        g_sys = aggregation.round_gradient(xk, yk, beta, w=wk,
+                                           path=aggregation.FUSED)
+        g_par = aggregation.gram_parity_gradient(
+            gram, gramy, beta, jnp.asarray(float(c), x.dtype))
+        return g_sys + g_par
+
+    us_ref = measure(jax.jit(reference), (x, y, w, xp, yp, beta),
+                     iters=iters)
+    us_fused = measure(jax.jit(fused), (xk, yk, wk, gram, gramy, beta),
+                       iters=iters)
+    return [
+        {"label": "reference_2pass", "bytes": bytes_ref,
+         "bound_us": bytes_ref / HBM_BW * 1e6, "measured_us": us_ref},
+        {"label": "fused_1pass", "bytes": bytes_fused,
+         "bound_us": bytes_fused / HBM_BW * 1e6, "measured_us": us_fused},
+        {"label": "fusion_speedup", "bytes": 0,
+         "bound_us": bytes_ref / bytes_fused,
+         "measured_us": us_ref / us_fused if us_fused else 0.0},
+    ], backend()
 
 
 def rows(results_path: str = RESULTS, mesh: str = "16x16"):
@@ -110,6 +184,13 @@ def main() -> None:
         print(f"{r['family']},{shape},{tile},{r['label']},"
               f"{r['bound_us']:.2f},{r['measured_us']:.0f},"
               f"{r['attainment']:.2e},{r['backend']}")
+
+    fusion, bk = round_grad_fusion_rows()
+    print("round_grad_fusion,label,bytes,bound_us_or_x,measured_us_or_x,"
+          "backend")
+    for r in fusion:
+        print(f"round_grad_fusion,{r['label']},{r['bytes']},"
+              f"{r['bound_us']:.2f},{r['measured_us']:.1f},{bk}")
 
     try:
         table = rows()

@@ -230,8 +230,10 @@ class UncodedFL:
     """Synchronous uncoded FL: every epoch waits for all n clients (Eq. 2)."""
 
     label: str = "uncoded"
+    grad_path: str = aggregation.FUSED
 
-    # no strategy knob steers the traced engine (label is display-only)
+    # grad_path steers the traced engine; it stays OUT of
+    # engine_value_fields so the engine cache keys on it automatically
     engine_value_fields: ClassVar[frozenset] = frozenset()
     # the flat training matrices are data-only: one replicated copy per sweep
     data_device_keys: ClassVar[frozenset] = frozenset({"x", "y"})
@@ -255,12 +257,16 @@ class UncodedFL:
                 "y": data.ys.reshape(data.m)}
 
     def round_contributions(self, state, dev, beta, arrivals):
-        resid = dev["x"] @ beta - dev["y"]
-        return resid @ dev["x"]  # exact full gradient (Eq. 2)
+        # exact full gradient (Eq. 2); both grad paths route through the
+        # dispatcher — on CPU they are one and the same expression
+        return aggregation.round_gradient(
+            dev["x"], dev["y"], beta,
+            path=aggregation.resolve_grad_path(self.grad_path))
 
     def tiered_contributions(self, state, dev, beta, arrivals, tier_masks):
-        resid = dev["x"] @ beta - dev["y"]
-        return aggregation.tier_reduce(resid, dev["x"], tier_masks), None
+        return aggregation.tiered_round_gradient(
+            dev["x"], dev["y"], beta, None, tier_masks,
+            path=aggregation.resolve_grad_path(self.grad_path)), None
 
     def uplink_bits(self, state: UncodedState, fleet: "FleetSpec",
                     epochs: int) -> float:
@@ -290,10 +296,14 @@ class CodedFL:
     c_up:       cap on the server's parity budget
     include_upload_delay: charge the one-time parity upload to the clock
     server_always_returns: ablation — parity gradient always lands
-    use_kernel: route matmuls through the Pallas kernels
+    use_kernel: DEPRECATED — folded into grad_path (True forces "fused");
+                still routes the one-time parity ENCODE through Pallas
     redundancy_plan: pre-solved `RedundancyPlan` (one element of a
                 `repro.plan.solve_redundancy_batched` sweep); `plan` then
                 skips the solve and only encodes
+    grad_path:  "fused" (default — packed one-pass round gradient, Gram
+                parity) or "reference" (the verbatim pre-fusion epoch
+                body, the bit-parity oracle)
     """
 
     key: jax.Array
@@ -305,6 +315,11 @@ class CodedFL:
     generator: str = "normal"
     label: str = "cfl"
     redundancy_plan: Optional["RedundancyPlan"] = None
+    grad_path: str = aggregation.FUSED
+
+    def _grad_path(self) -> str:
+        return aggregation.resolve_grad_path(self.grad_path,
+                                             self.use_kernel)
 
     # knobs that only shape the plan / host-side sampling, never the traced
     # engine: lanes differing in them share one compiled sweep engine
@@ -367,9 +382,21 @@ class CodedFL:
 
     def device_state(self, state: cfl.CFLState,
                      data: TrainData) -> Dict[str, jax.Array]:
+        if self._grad_path() == aggregation.FUSED:
+            return cfl.fused_coded_device_state(state, data)
         return cfl.coded_device_state(state, data)
 
     def round_contributions(self, state, dev, beta, arrivals):
+        if self._grad_path() == aggregation.FUSED:
+            # fused layout (packed support or dense fallback): the base
+            # row weight carries the load support, parity is Gram-folded
+            x, y, w0, client = aggregation.fused_sys_block(dev)
+            w = w0 * arrivals["received"][client]
+            if state.c == 0:
+                return aggregation.round_gradient(
+                    x, y, beta, w=w, path=aggregation.FUSED)
+            return aggregation.fused_coded_gradient(
+                dev, w, arrivals["parity_ok"], beta)
         resid = dev["x"] @ beta - dev["y"]
         # row weight = (point within client's systematic load) AND
         # (client's partial gradient arrived by t*)
@@ -386,6 +413,17 @@ class CodedFL:
         # systematic partials reduce per edge tier; the parity gradient is
         # computed AT the server on the composite parity data, so it rides
         # as the server-side term and bypasses the tier stage entirely
+        if self._grad_path() == aggregation.FUSED:
+            x, y, w0, client = aggregation.fused_sys_block(dev)
+            masks = aggregation.fused_tier_masks(dev, tier_masks)
+            w = w0 * arrivals["received"][client]
+            partials = aggregation.tiered_round_gradient(
+                x, y, beta, w, masks, path=aggregation.FUSED)
+            if state.c == 0:
+                return partials, None
+            g_par = aggregation.gram_parity_gradient(
+                dev["par_gram"], dev["par_gramy"], beta, dev["par_c"])
+            return partials, arrivals["parity_ok"] * g_par
         resid = dev["x"] @ beta - dev["y"]
         w = dev["w_sys"] * arrivals["received"][dev["row_client"]]
         partials = aggregation.tier_reduce(resid * w, dev["x"], tier_masks)
@@ -401,7 +439,7 @@ class CodedFL:
         return cfl.coded_uplink_bits(state, fleet, epochs)
 
     def engine_key(self, state: cfl.CFLState) -> Hashable:
-        return (state.c > 0, self.use_kernel)
+        return (state.c > 0, self.use_kernel, self._grad_path())
 
     def sweep_inputs(self, state: cfl.CFLState, fleet: "FleetSpec",
                      epochs: int, rng: np.random.Generator) -> EpochSchedule:
@@ -437,6 +475,7 @@ class GradientCodingFL:
 
     r: int
     label: str = "gradcode"
+    grad_path: str = aggregation.FUSED
 
     # r shapes the plan (groups) only; the traced engine sees it through
     # `engine_key` (n_groups) and the arrival/device tensor shapes
@@ -488,16 +527,18 @@ class GradientCodingFL:
         # groups with >= 1 returner contribute their exact group-sum
         # gradient (what the coded uploads decode to); with every group
         # reporting this is exactly the full gradient
-        resid = dev["x"] @ beta - dev["y"]
         w = arrivals["group_ok"][dev["row_group"]]
-        return (resid * w) @ dev["x"]
+        return aggregation.round_gradient(
+            dev["x"], dev["y"], beta, w=w,
+            path=aggregation.resolve_grad_path(self.grad_path))
 
     def tiered_contributions(self, state, dev, beta, arrivals, tier_masks):
         # every contribution is client-resident (the decoded group sums),
         # so the whole gradient reduces through the edge tiers
-        resid = dev["x"] @ beta - dev["y"]
         w = arrivals["group_ok"][dev["row_group"]]
-        return aggregation.tier_reduce(resid * w, dev["x"], tier_masks), None
+        return aggregation.tiered_round_gradient(
+            dev["x"], dev["y"], beta, w, tier_masks,
+            path=aggregation.resolve_grad_path(self.grad_path)), None
 
     def uplink_bits(self, state: GradCodingState, fleet: "FleetSpec",
                     epochs: int) -> float:

@@ -21,6 +21,157 @@ import jax
 import jax.numpy as jnp
 
 
+# --------------------------------------------------------------------------
+# The grad_path knob.  Every strategy computes its round gradient through
+# the dispatchers below; `path` picks between
+#
+#   REFERENCE — the verbatim historical two-pass expressions (the
+#     bit-parity oracle: traces are bit-identical to the pre-fusion
+#     epoch bodies), and
+#   FUSED     — the one-pass hot path.  On TPU this launches the
+#     `kernels.round_grad` Pallas family (one HBM sweep over X, masks
+#     as traced operands).  Off-TPU, where Pallas runs interpreted, the
+#     fused win comes from the *operand layout* instead — strategies
+#     feed packed systematic rows and Gram-folded parity (see
+#     `core.cfl.fused_coded_device_state`) — and the dispatchers keep
+#     the reference jnp expressions, so CPU fused and reference
+#     gradients are bit-identical on identical operands.
+#
+# Dispatch on `path`/backend is host-side at trace time: one compiled
+# engine per path, no runtime branching.
+# --------------------------------------------------------------------------
+
+FUSED = "fused"
+REFERENCE = "reference"
+GRAD_PATHS = (FUSED, REFERENCE)
+
+
+def resolve_grad_path(path: str, use_kernel: bool = False) -> str:
+    """Validate a strategy's `grad_path`, folding in the deprecated
+    `use_kernel` flag (use_kernel=True forces the fused path)."""
+    if path not in GRAD_PATHS:
+        raise ValueError(
+            f"grad_path must be one of {GRAD_PATHS}, got {path!r}")
+    return FUSED if use_kernel else path
+
+
+def _fused_kernels():
+    """TPU only: the Pallas round-gradient entry points (None off-TPU)."""
+    from repro.kernels.common import on_tpu
+    if not on_tpu():
+        return None
+    from repro.kernels.round_grad import ops as rg_ops
+    return rg_ops
+
+
+def round_gradient(x: jax.Array, y: jax.Array, beta: jax.Array,
+                   w: jax.Array | None = None,
+                   path: str = REFERENCE) -> jax.Array:
+    """g = (w * (X beta - y)) @ X — the flat round gradient.
+
+    The reference expression contracts the leading (row-major
+    contiguous) axis both times, exactly as every strategy's epoch body
+    historically wrote it; on TPU the fused path computes the same sum
+    in one HBM pass."""
+    rg_ops = _fused_kernels() if path == FUSED else None
+    if rg_ops is not None:
+        return rg_ops.masked_round_gradient(x, y, w, beta)
+    resid = x @ beta - y
+    if w is None:
+        return resid @ x
+    return (resid * w) @ x
+
+
+def coded_round_gradient(x: jax.Array, y: jax.Array, w: jax.Array,
+                         x_par: jax.Array, y_par: jax.Array,
+                         w_par: jax.Array, beta: jax.Array,
+                         path: str = REFERENCE) -> jax.Array:
+    """Systematic + parity round gradient with per-row parity weights
+    (Eq. 18's 1/(c*rho) normalization folded into w_par).  On TPU the
+    fused path is a single two-stream Pallas launch."""
+    rg_ops = _fused_kernels() if path == FUSED else None
+    if rg_ops is not None:
+        return rg_ops.coded_round_gradient(x, y, w, x_par, y_par, w_par,
+                                           beta)
+    g_sys = round_gradient(x, y, beta, w=w)
+    g_par = ((x_par @ beta - y_par) * w_par) @ x_par
+    return g_sys + g_par
+
+
+def tiered_round_gradient(x: jax.Array, y: jax.Array, beta: jax.Array,
+                          w: jax.Array | None, tier_masks: jax.Array,
+                          path: str = REFERENCE) -> jax.Array:
+    """(T, d) tier partials of the masked round gradient — the fleet
+    layer's edge stage.  Reference path: residual once + `tier_reduce`
+    (the pre-fusion expression).  Fused path on TPU: one pass over X
+    shared by all tiers; the per-tier expression matches the flat
+    kernel at T == 1, preserving the single-tier bit-exact contract."""
+    rg_ops = _fused_kernels() if path == FUSED else None
+    if rg_ops is not None:
+        return rg_ops.tier_masked_round_gradient(x, y, w, tier_masks, beta)
+    resid = x @ beta - y
+    contrib = resid if w is None else resid * w
+    return tier_reduce(contrib, x, tier_masks)
+
+
+@jax.jit
+def parity_gram(x_par: jax.Array, y_par: jax.Array):
+    """Normal-equation factors of the parity block, computed ONCE at
+    plan time: G = X~^T X~ (d, d) and b = y~ X~ (d,).  Eq. 18 then
+    collapses to (G beta - b) / c — zero passes over the (c, d) parity
+    rows per epoch."""
+    return x_par.T @ x_par, y_par @ x_par
+
+
+def gram_parity_gradient(gram: jax.Array, gramy: jax.Array,
+                         beta: jax.Array, c_norm) -> jax.Array:
+    """(G beta - b) / c_norm == Eq. 18 through precomputed Gram factors."""
+    return (gram @ beta - gramy) / c_norm
+
+
+def fused_sys_block(dev: dict) -> tuple:
+    """(x, y, base_w, client_ids) of the fused systematic block.
+
+    Resolves both layouts `core.cfl.fused_coded_device_state` emits:
+    the packed one (plan-support rows under per-lane "sys_*" keys) and
+    the dense fallback (full rows under the shared "x"/"y"/"row_client"
+    names — replicated, not stacked, across sweep lanes — with the load
+    mask as the per-lane base weight).  Trace-time dispatch: the layout
+    is part of the engine's shape bucket, never a runtime branch."""
+    if "sys_x" in dev:
+        return (dev["sys_x"], dev["sys_y"], dev["sys_w"],
+                dev["sys_client"])
+    return dev["x"], dev["y"], dev["sys_w"], dev["row_client"]
+
+
+def fused_tier_masks(dev: dict, tier_masks: jax.Array) -> jax.Array:
+    """(T, m) tier row masks gathered to the fused layout's rows: packed
+    layouts select their support columns, the dense fallback uses the
+    full-width masks as-is."""
+    if "sys_rows" in dev:
+        return jnp.take(tier_masks, dev["sys_rows"], axis=1)
+    return tier_masks
+
+
+def fused_coded_gradient(dev: dict, w: jax.Array, parity_gate,
+                         beta: jax.Array, rho: float = 1.0) -> jax.Array:
+    """The static-parity fused round: packed systematic rows through
+    `round_gradient` (one-pass kernel on TPU) + the Gram-folded parity
+    matvec, gated by the scalar parity arrival.  Consumes either fused
+    device layout of `core.cfl.fused_coded_device_state`.
+
+    The Eq.-18 divisor c rides along as the `par_c` OPERAND (never a
+    trace constant): the Gram factors erased c from the operand shapes,
+    so engines are shared across parity budgets and the divisor must
+    stay a value.  `rho` is an engine-keyed static (StochasticCodedFL's
+    sample_frac); rho == 1.0 multiplies exactly."""
+    x, y, _, _ = fused_sys_block(dev)
+    g_sys = round_gradient(x, y, beta, w=w, path=FUSED)
+    g_par = gram_parity_gradient(dev["par_gram"], dev["par_gramy"], beta,
+                                 dev["par_c"] * rho)
+    return g_sys + parity_gate * g_par
+
+
 @jax.jit
 def client_partial_gradients(xs: jax.Array, ys: jax.Array,
                              load_mask: jax.Array, beta: jax.Array) -> jax.Array:

@@ -66,6 +66,117 @@ def coded_uplink_bits(state, fleet: "FleetSpec", epochs: int,
         + epochs * n * packets_per_epoch * fleet.packet_bits
 
 
+# Packed row counts are padded up to a bucket multiple so sessions with
+# nearby plans (e.g. the nu-ladder sweeps) land in the same engine shape
+# bucket instead of fragmenting one compiled program per plan.  Padding
+# rows replicate row 0 at weight 0.0 — exact-zero contributions, and the
+# index stays valid for arrival/tier-mask gathers.
+PACK_BLOCK = 512
+PACK_MIN = 64
+# Above this support density packing is skipped: dropping <15% of rows
+# saves almost no bandwidth, while the per-plan packed row count would
+# fragment sweeps into one compiled engine per plan AND force the bulk
+# (k, d) feature block to be stacked per lane.  The dense fallback keeps
+# the full (m, d) rows under the shared data_device_keys names, so every
+# dense lane of a sweep shares one engine and ONE replicated copy of X.
+PACK_DENSE_FRAC = 0.85
+
+
+def packed_row_indices(load_flat: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Row indices of the plan's systematic support, bucket-padded.
+
+    load_flat: (m,) flattened load mask.  Returns (idx, valid): int32
+    indices of length ceil(k / PACK_BLOCK) * PACK_BLOCK (min PACK_MIN)
+    where k rows have load > 0, and the bool validity mask that becomes
+    the packed layout's base row weight."""
+    keep = np.flatnonzero(np.asarray(load_flat) > 0).astype(np.int32)
+    k = int(keep.size)
+    target = max(PACK_MIN, PACK_BLOCK * -(-k // PACK_BLOCK)) if k \
+        else PACK_MIN
+    idx = np.zeros(target, dtype=np.int32)
+    idx[:k] = keep
+    valid = np.arange(target) < k
+    return idx, valid
+
+
+def parity_gram_factors(state) -> tuple[jax.Array, jax.Array]:
+    """Memoized (G, b) = (X~^T X~, y~ X~) for one protocol state — the
+    plan-time half of the Gram-folded Eq. 18 (see
+    `aggregation.parity_gram`).  Cached on the state instance so every
+    engine build over the same plan reuses one factorization."""
+    cached = getattr(state, "_parity_gram", None)
+    if cached is None:
+        cached = aggregation.parity_gram(state.x_parity, state.y_parity)
+        state._parity_gram = cached
+    return cached
+
+
+def fused_coded_device_state(state, data, x: jax.Array | None = None,
+                             parity_rows: bool = False) -> dict:
+    """Scan-engine operands for the FUSED gradient path: systematic rows
+    packed to the plan's support (zero-load rows dropped host-side, the
+    count bucket-padded at weight 0) and the parity block folded to its
+    Gram factors.  At the paper's §IV operating point this cuts the
+    per-epoch row stream ~23% and removes both parity passes entirely.
+
+    The packed keys deliberately do NOT overlap `coded_device_state`'s
+    data_device_keys ("x"/"y"/"row_client"): every packed operand is
+    plan-derived and must stay per-lane in sweeps.  When the support is
+    DENSE (padded count >= PACK_DENSE_FRAC * m) packing is skipped and
+    the dict uses the shared names instead — full rows with the load
+    mask as `sys_w` — so nu-ladder sweep lanes whose plans load nearly
+    everything land in ONE engine bucket with one replicated X (consume
+    via `aggregation.fused_sys_block`, which resolves both layouts).
+
+    x: override feature matrix (m, d_feat) — CodedFedL's RFF features.
+    parity_rows: also ship the raw parity shards (schemes with dynamic
+    per-row parity masks, e.g. StochasticCodedFL at rho < 1, need the
+    rows themselves, not just the Gram factors).
+
+    The packed operands are memoized on the state instance (keyed by the
+    data/x object identities, which the tuple keeps alive) so repeated
+    `Session.run` calls over one plan skip the host-side gathers.
+    """
+    x_arg = x
+    cached = getattr(state, "_fused_dev", None)
+    if cached is not None and cached[0] is data and cached[1] is x_arg \
+            and cached[2] == parity_rows:
+        return cached[3]
+    n, ell = data.n, data.ell
+    if x is None:
+        x = data.xs.reshape(data.m, data.d)
+    y = data.ys.reshape(data.m)
+    load_flat = np.asarray(state.load_mask).reshape(data.m)
+    idx, valid = packed_row_indices(load_flat)
+    row_client = np.repeat(np.arange(n, dtype=np.int32), ell)
+    if idx.size >= PACK_DENSE_FRAC * data.m:
+        # dense fallback: full rows, load mask as the base row weight —
+        # bit-identical systematic sums to the reference path
+        dev = {"x": x, "y": y,
+               "row_client": jnp.asarray(row_client),
+               "sys_w": jnp.asarray(load_flat, dtype=x.dtype)}
+    else:
+        jidx = jnp.asarray(idx)
+        dev = {"sys_x": jnp.take(x, jidx, axis=0),
+               "sys_y": jnp.take(y, jidx),
+               "sys_w": jnp.asarray(valid, dtype=x.dtype),
+               "sys_client": jnp.asarray(row_client[idx]),
+               "sys_rows": jidx}
+    if state.c > 0:
+        gram, gramy = parity_gram_factors(state)
+        dev["par_gram"] = gram
+        dev["par_gramy"] = gramy
+        # Eq.-18 divisor as an OPERAND: the (d, d) Gram factors erased c
+        # from the operand shapes, so one compiled engine serves every
+        # parity budget — the divisor must be a value, not a constant
+        dev["par_c"] = jnp.asarray(float(state.c), dtype=x.dtype)
+        if parity_rows:
+            dev["x_parity"] = state.x_parity
+            dev["y_parity"] = state.y_parity
+    state._fused_dev = (data, x_arg, parity_rows, dev)
+    return dev
+
+
 def coded_device_state(state, data) -> dict:
     """The scan-engine operands every coded scheme shares: flat (m, d)
     data layout, systematic load mask, per-row client ids, parity shards.

@@ -1,0 +1,69 @@
+"""jit'd wrappers for the fused round-gradient kernel family.
+
+On CPU (no TPU backend) the kernel bodies run in interpret mode — same
+lowering, Python-evaluated — so correctness is validated everywhere
+while the BlockSpec tiling targets TPU VMEM.  The CPU *production* hot
+path does not come through here: `core.aggregation`'s dispatchers keep
+the fused path on jnp expressions off-TPU (see that module).
+
+`block_m="auto"` (the default) resolves the row tile host-side against
+the persisted tuning cache (family "round_grad", shape bucket of
+`(m, d)`, backend); a cold miss falls back to `DEFAULT_BLOCK_M`
+bit-for-bit.  Resolution never autotunes — see `python -m repro.tune`.
+All three variants resolve against the SAME family and shape so the
+flat, coded and tiered launches of one workload share a row tile — the
+fleet layer's single-tier bit-exact contract needs equal block_m.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import on_tpu, resolve_block
+
+from . import ref
+from . import round_grad as _k
+
+
+def _resolve(x, block_m):
+    return resolve_block("round_grad", (x.shape[0], x.shape[1]),
+                         block_m, _k.DEFAULT_BLOCK_M)
+
+
+def masked_round_gradient(x: jax.Array, y: jax.Array, w: jax.Array | None,
+                          beta: jax.Array, block_m="auto",
+                          force_interpret: bool = False) -> jax.Array:
+    """Fused (w * (X beta - y)) @ X; w=None means unweighted."""
+    if w is None:
+        w = jnp.ones_like(y)
+    return _k.masked_round_gradient(
+        x, y, w, beta, block_m=_resolve(x, block_m),
+        interpret=force_interpret or not on_tpu())
+
+
+def coded_round_gradient(x: jax.Array, y: jax.Array, w: jax.Array,
+                         x_par: jax.Array, y_par: jax.Array,
+                         w_par: jax.Array, beta: jax.Array, block_m="auto",
+                         force_interpret: bool = False) -> jax.Array:
+    """Systematic + parity blocks in one launch; w_par may be a scalar
+    gate (broadcast to per-row parity weights).  An empty parity block
+    (c == 0) degenerates to the flat masked kernel."""
+    if x_par.shape[0] == 0:
+        return masked_round_gradient(x, y, w, beta, block_m=block_m,
+                                     force_interpret=force_interpret)
+    w_par = jnp.broadcast_to(w_par, y_par.shape).astype(y_par.dtype)
+    return _k.coded_round_gradient(
+        x, y, w, x_par, y_par, w_par, beta, block_m=_resolve(x, block_m),
+        interpret=force_interpret or not on_tpu())
+
+
+def tier_masked_round_gradient(x: jax.Array, y: jax.Array,
+                               w: jax.Array | None, tier_masks: jax.Array,
+                               beta: jax.Array, block_m="auto",
+                               force_interpret: bool = False) -> jax.Array:
+    """(T, d) tier partials with one pass over X."""
+    if w is None:
+        w = jnp.ones_like(y)
+    return _k.tier_masked_round_gradient(
+        x, y, w, tier_masks, beta, block_m=_resolve(x, block_m),
+        interpret=force_interpret or not on_tpu())

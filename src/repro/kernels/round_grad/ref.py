@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the fused round-gradient kernels.
+
+These are the verbatim reference expressions from `core.aggregation` —
+the two-pass forms the strategies used before fusion — kept as the
+bit-parity oracle the interpret-mode tests compare against.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def masked_round_gradient(x: jax.Array, y: jax.Array, w: jax.Array,
+                          beta: jax.Array) -> jax.Array:
+    """g = (w * (X beta - y)) @ X.  x: (M, D), y/w: (M,), beta: (D,)."""
+    resid = x @ beta - y
+    return (resid * w) @ x
+
+
+def coded_round_gradient(x: jax.Array, y: jax.Array, w: jax.Array,
+                         x_par: jax.Array, y_par: jax.Array,
+                         w_par: jax.Array, beta: jax.Array) -> jax.Array:
+    """Systematic + parity blocks, streamed as two masked gradients."""
+    w_par = jnp.broadcast_to(w_par, y_par.shape)
+    return masked_round_gradient(x, y, w, beta) \
+        + masked_round_gradient(x_par, y_par, w_par, beta)
+
+
+def tier_masked_round_gradient(x: jax.Array, y: jax.Array, w: jax.Array,
+                               tier_masks: jax.Array,
+                               beta: jax.Array) -> jax.Array:
+    """(T, d) tier partials — `aggregation.tier_reduce` semantics."""
+    contrib = (x @ beta - y) * w
+    return jax.lax.map(lambda mask: (contrib * mask) @ x, tier_masks)

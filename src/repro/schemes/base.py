@@ -16,12 +16,13 @@ import jax
 import numpy as np
 
 from repro.core.cfl import (coded_device_state, coded_uplink_bits,
-                            parity_upload_bits, sample_parity_upload_time)
+                            fused_coded_device_state, parity_upload_bits,
+                            sample_parity_upload_time)
 from repro.core.delay_model import DeviceDelayParams
 from repro.core.redundancy import RedundancyPlan
 
 __all__ = ["CodedSchemeState", "coded_device_state", "coded_uplink_bits",
-           "sample_parity_upload_time"]
+           "fused_coded_device_state", "sample_parity_upload_time"]
 
 
 @dataclasses.dataclass

@@ -98,6 +98,11 @@ class CodedFedL:
     generator: str = "normal"
     label: str = "cfedl"
     redundancy_plan: Optional[RedundancyPlan] = None
+    grad_path: str = aggregation.FUSED
+
+    def _grad_path(self) -> str:
+        return aggregation.resolve_grad_path(self.grad_path,
+                                             self.use_kernel)
 
     # knobs that only shape the plan, host-side sampling, or operand
     # VALUES (rff_gamma moves feature values, never shapes); d_feat stays
@@ -203,10 +208,20 @@ class CodedFedL:
 
     def device_state(self, state: CodedFedLState,
                      data: TrainData) -> Dict[str, jax.Array]:
+        d_feat = int(state.features.shape[-1])
+        if self._grad_path() == aggregation.FUSED:
+            # packed layout over the FEATURE matrices: kernel-regression
+            # sessions ride the same fused path as raw CFL.  The reshape
+            # is memoized on the state so `fused_coded_device_state`'s
+            # identity-keyed operand cache hits on repeated runs.
+            x_flat = getattr(state, "_features_flat", None)
+            if x_flat is None:
+                x_flat = state.features.reshape(data.m, d_feat)
+                state._features_flat = x_flat
+            return cfl.fused_coded_device_state(state, data, x=x_flat)
         # `cfl.coded_device_state` with x swapped for the feature tensor
         # (identical arrays when the map is the identity)
         n, ell = data.n, data.ell
-        d_feat = int(state.features.shape[-1])
         row_client = jnp.repeat(jnp.arange(n, dtype=jnp.int32), ell)
         return {"x": state.features.reshape(data.m, d_feat),
                 "y": data.ys.reshape(data.m),
@@ -216,6 +231,14 @@ class CodedFedL:
                 "y_parity": state.y_parity}
 
     def round_contributions(self, state, dev, beta, arrivals):
+        if self._grad_path() == aggregation.FUSED:
+            x, y, w0, client = aggregation.fused_sys_block(dev)
+            w = w0 * arrivals["received"][client]
+            if state.c == 0:
+                return aggregation.round_gradient(
+                    x, y, beta, w=w, path=aggregation.FUSED)
+            return aggregation.fused_coded_gradient(
+                dev, w, arrivals["parity_ok"], beta)
         resid = dev["x"] @ beta - dev["y"]
         w = dev["w_sys"] * arrivals["received"][dev["row_client"]]
         g_sys = (resid * w) @ dev["x"]
@@ -229,6 +252,17 @@ class CodedFedL:
     def tiered_contributions(self, state, dev, beta, arrivals, tier_masks):
         # systematic feature-space partials reduce per edge tier; the
         # parity gradient is server-resident and rides as the server term
+        if self._grad_path() == aggregation.FUSED:
+            x, y, w0, client = aggregation.fused_sys_block(dev)
+            masks = aggregation.fused_tier_masks(dev, tier_masks)
+            w = w0 * arrivals["received"][client]
+            partials = aggregation.tiered_round_gradient(
+                x, y, beta, w, masks, path=aggregation.FUSED)
+            if state.c == 0:
+                return partials, None
+            g_par = aggregation.gram_parity_gradient(
+                dev["par_gram"], dev["par_gramy"], beta, dev["par_c"])
+            return partials, arrivals["parity_ok"] * g_par
         resid = dev["x"] @ beta - dev["y"]
         w = dev["w_sys"] * arrivals["received"][dev["row_client"]]
         partials = aggregation.tier_reduce(resid * w, dev["x"], tier_masks)
@@ -246,7 +280,8 @@ class CodedFedL:
         return cfl.coded_uplink_bits(state, fleet, epochs)
 
     def engine_key(self, state: CodedFedLState) -> Hashable:
-        return (state.c > 0, self.use_kernel, self.d_feat)
+        return (state.c > 0, self.use_kernel, self.d_feat,
+                self._grad_path())
 
     def sweep_inputs(self, state: CodedFedLState, fleet: "FleetSpec",
                      epochs: int, rng: np.random.Generator) -> EpochSchedule:

@@ -64,7 +64,7 @@ from repro.core.delay_model import sample_total
 from repro.core.redundancy import RedundancyPlan, systematic_weights
 
 from .base import (CodedSchemeState, coded_device_state, coded_uplink_bits,
-                   sample_parity_upload_time)
+                   fused_coded_device_state, sample_parity_upload_time)
 
 if TYPE_CHECKING:  # annotation-only: keeps schemes free of sim imports
     from repro.sim.network import FleetSpec
@@ -120,6 +120,10 @@ class StochasticCodedFL:
     epsilon_target: Optional[float] = None
     delta: float = 1e-5
     rounds: Optional[int] = None
+    grad_path: str = aggregation.FUSED
+
+    def _grad_path(self) -> str:
+        return aggregation.resolve_grad_path(self.grad_path)
 
     # noise / budget knobs feed the plan, the encoded values and the DP
     # accounting report — never the traced engine — so a whole
@@ -274,9 +278,36 @@ class StochasticCodedFL:
 
     def device_state(self, state: StochasticState,
                      data: TrainData) -> Dict[str, jax.Array]:
+        if self._grad_path() == aggregation.FUSED:
+            # rho < 1 keeps the raw parity rows alongside the Gram
+            # factors: the per-round Bernoulli mask needs the rows
+            return fused_coded_device_state(
+                state, data, parity_rows=self.sample_frac < 1.0)
         return coded_device_state(state, data)
 
+    def _fused_round(self, state, dev, beta, arrivals):
+        x, y, w0, client = aggregation.fused_sys_block(dev)
+        w = w0 * arrivals["received"][client]
+        if state.c == 0:
+            return aggregation.round_gradient(
+                x, y, beta, w=w, path=aggregation.FUSED)
+        if self.sample_frac < 1.0:
+            # inverse-probability row weights keep the subsampled parity
+            # gradient unbiased; folding 1/(c*rho) into them lets the
+            # systematic and parity streams share ONE fused launch
+            w_par = arrivals["parity_mask"] \
+                * (arrivals["parity_ok"]
+                   / (dev["par_c"] * self.sample_frac))
+            return aggregation.coded_round_gradient(
+                x, y, w, dev["x_parity"],
+                dev["y_parity"], w_par, beta, path=aggregation.FUSED)
+        # rho == 1: static parity — the Gram-folded Eq. 18
+        return aggregation.fused_coded_gradient(
+            dev, w, arrivals["parity_ok"], beta, rho=self.sample_frac)
+
     def round_contributions(self, state, dev, beta, arrivals):
+        if self._grad_path() == aggregation.FUSED:
+            return self._fused_round(state, dev, beta, arrivals)
         resid = dev["x"] @ beta - dev["y"]
         w = dev["w_sys"] * arrivals["received"][dev["row_client"]]
         g_sys = (resid * w) @ dev["x"]
@@ -293,6 +324,26 @@ class StochasticCodedFL:
     def tiered_contributions(self, state, dev, beta, arrivals, tier_masks):
         # systematic partials reduce per edge tier; the stochastic parity
         # gradient is server-resident and rides as the server-side term
+        if self._grad_path() == aggregation.FUSED:
+            x, y, w0, client = aggregation.fused_sys_block(dev)
+            masks = aggregation.fused_tier_masks(dev, tier_masks)
+            w = w0 * arrivals["received"][client]
+            partials = aggregation.tiered_round_gradient(
+                x, y, beta, w, masks, path=aggregation.FUSED)
+            if state.c == 0:
+                return partials, None
+            c_norm = dev["par_c"] * self.sample_frac
+            if self.sample_frac < 1.0:
+                w_par = arrivals["parity_mask"] \
+                    * (arrivals["parity_ok"] / c_norm)
+                g_par = aggregation.round_gradient(
+                    dev["x_parity"], dev["y_parity"], beta, w=w_par,
+                    path=aggregation.FUSED)
+            else:
+                g_par = arrivals["parity_ok"] \
+                    * aggregation.gram_parity_gradient(
+                        dev["par_gram"], dev["par_gramy"], beta, c_norm)
+            return partials, g_par
         resid = dev["x"] @ beta - dev["y"]
         w = dev["w_sys"] * arrivals["received"][dev["row_client"]]
         partials = aggregation.tier_reduce(resid * w, dev["x"], tier_masks)

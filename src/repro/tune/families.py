@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.kernels import common as kcommon
 from repro.kernels.coded_grad import coded_grad as _cg
 from repro.kernels.encode import encode as _en
+from repro.kernels.round_grad import round_grad as _rg
 
 # Resident-tile budget on TPU: tiles for all operands + accumulator must
 # sit in VMEM (~16 MB/core) with room for double buffering.
@@ -161,8 +162,55 @@ class CodedGradFamily:
                 jax.random.normal(jax.random.fold_in(key, 2), (d,)))
 
 
+class RoundGradFamily:
+    """`kernels/round_grad` masked variant: g = (w . (X beta - y)) X in
+    one sweep over X, 1-d row tile (bm,).  The coded and tier-masked
+    variants resolve against the SAME family/shape (their row streams
+    are identical), so one tuned tile serves all three launches."""
+
+    name = "round_grad"
+    default_block = (_rg.DEFAULT_BLOCK_M,)
+
+    def candidate_blocks(self, shape, backend: str) -> list[tuple]:
+        m, d = shape
+        budget = _tile_budget(backend)
+        cands = []
+        for bm in _pow2_options(m, floor=256):
+            # X tile + y/w slices + beta + (1, d) accumulator
+            tile_bytes = 4 * (bm * d + 2 * bm + 2 * d)
+            if tile_bytes <= budget:
+                cands.append((bm,))
+        if self.default_block not in cands:
+            cands.append(self.default_block)
+        return cands
+
+    def bind(self, shape, block):
+        m, d = shape
+        interpret = not kcommon.on_tpu()
+
+        def fn(x, y, w, beta):
+            return _rg.masked_round_gradient(x, y, w, beta,
+                                             block_m=int(block[0]),
+                                             interpret=interpret)
+
+        sds = (jax.ShapeDtypeStruct((m, d), jnp.float32),
+               jax.ShapeDtypeStruct((m,), jnp.float32),
+               jax.ShapeDtypeStruct((m,), jnp.float32),
+               jax.ShapeDtypeStruct((d,), jnp.float32))
+        return fn, sds
+
+    def make_args(self, shape, seed: int = 0):
+        m, d = shape
+        key = jax.random.PRNGKey(seed)
+        return (jax.random.normal(key, (m, d)),
+                jax.random.normal(jax.random.fold_in(key, 1), (m,)),
+                jax.random.uniform(jax.random.fold_in(key, 2), (m,)),
+                jax.random.normal(jax.random.fold_in(key, 3), (d,)))
+
+
 FAMILIES = {f.name: f for f in
-            (EncodeFamily(), EncodePrngFamily(), CodedGradFamily())}
+            (EncodeFamily(), EncodePrngFamily(), CodedGradFamily(),
+             RoundGradFamily())}
 
 # The shapes `python -m repro.tune --ci-defaults` tunes and commits to
 # `defaults.json`: the paper's §IV composite-parity shapes, the
@@ -176,4 +224,7 @@ CI_SHAPES: dict[str, list[tuple]] = {
     "encode_prng": [(936, 300, 500), (2048, 512, 512),
                     (128, 8, 32), (256, 16, 64)],
     "coded_grad": [(936, 500), (8192, 512)],
+    # packed §IV systematic block (5524 -> 5632 bucket-padded rows) and
+    # the fleet-scale row stream
+    "round_grad": [(5632, 500), (8192, 512)],
 }

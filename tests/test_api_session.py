@@ -96,19 +96,32 @@ def test_uncoded_session_matches_legacy_trace(small):
 
 
 def test_cfl_session_matches_legacy_trace(small):
+    """grad_path="reference" pinned: this is the bit-stability contract
+    against the pre-fusion per-epoch loop (tight rtol); the fused
+    default is checked separately below at its documented tolerance."""
     fleet, data = small
     c = int(0.3 * data.m)
     errs, upload, t_star = _legacy_run_cfl(
         fleet, data, lr=0.05, epochs=100, rng=np.random.default_rng(0),
         key=jax.random.PRNGKey(1), fixed_c=c)
     session = Session(
-        strategy=CodedFL(key=jax.random.PRNGKey(1), fixed_c=c),
+        strategy=CodedFL(key=jax.random.PRNGKey(1), fixed_c=c,
+                         grad_path="reference"),
         fleet=fleet, lr=0.05, epochs=100)
     rep = session.run(data, rng=np.random.default_rng(0))
     np.testing.assert_allclose(rep.nmse, errs, rtol=1e-4, atol=1e-7)
     assert rep.setup_time == pytest.approx(upload)
     assert rep.times[0] == pytest.approx(upload)  # upload delay included
     np.testing.assert_allclose(rep.epoch_durations, t_star)
+
+    # fused default: same legacy trace at the fused path's tolerance
+    fused = Session(
+        strategy=CodedFL(key=jax.random.PRNGKey(1), fixed_c=c),
+        fleet=fleet, lr=0.05, epochs=100).run(
+            data, rng=np.random.default_rng(0))
+    np.testing.assert_allclose(fused.nmse, errs, rtol=1e-3, atol=1e-6)
+    np.testing.assert_array_equal(fused.epoch_durations,
+                                  rep.epoch_durations)
 
 
 def test_cfl_shim_equals_direct_session(small):

@@ -100,7 +100,7 @@ def test_committed_defaults_cover_ci_shapes():
             ent = tc._load_entries(tc.defaults_path()).get(
                 tc.cache_key(family, shape, "cpu"))
             assert ent is not None, (family, shape)
-            want_len = 1 if family == "coded_grad" else 3
+            want_len = 1 if family in ("coded_grad", "round_grad") else 3
             assert len(ent["block"]) == want_len, (family, shape)
 
 
